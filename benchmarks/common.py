@@ -1,0 +1,69 @@
+"""Shared benchmark utilities.
+
+Every benchmark module exposes ``run(quick: bool) -> list[dict]`` rows and a
+``NAME``/``PAPER_REF``; ``benchmarks.run`` orchestrates them and emits CSV.
+Benchmarks reproduce the paper's *experiment structure* at CPU scale
+(reduced m / rounds / model size — the protocol dynamics, not wall-clock,
+are the object of study; the knobs are the same as the paper's).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, List
+
+from repro.config import ProtocolConfig, TrainConfig, get_arch
+from repro.data.synthetic import SyntheticMNIST
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn_params
+from repro.train.loop import run_protocol_training
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def mnist_setup(image_size: int = 14):
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+    return cfg, loss_fn, init_fn
+
+
+def run_mnist_protocol(proto: ProtocolConfig, m: int, rounds: int,
+                       lr: float = 0.1, optimizer: str = "sgd",
+                       seed: int = 0, batch: int = 10,
+                       init_heterogeneity: float = 0.0,
+                       image_size: int = 14):
+    cfg, loss_fn, init_fn = mnist_setup(image_size)
+    src = SyntheticMNIST(seed=0, image_size=image_size)
+    dl, traj = run_protocol_training(
+        loss_fn, init_fn, src, m=m, rounds=rounds, protocol=proto,
+        train=TrainConfig(optimizer=optimizer, learning_rate=lr),
+        batch=batch, seed=seed, init_heterogeneity=init_heterogeneity)
+    import jax
+    test = src.sample(jax.random.PRNGKey(10_000), 512)
+    acc = float(cnn_accuracy(cfg, dl.mean_model(), test))
+    return dl, traj, acc
+
+
+def save_rows(name: str, rows: List[dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
+
+
+def timed(fn: Callable):
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0
+
+
+def fmt_bytes(n) -> str:
+    n = float(n)
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if n < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"

@@ -1,0 +1,77 @@
+"""Amortized collective cost of dynamic averaging (DESIGN.md §2 promise).
+
+The dry-run's collective term for ``train_dynamic`` is a WORST CASE: the
+sync all-reduce sits on a ``lax.cond`` branch that both lowers but only
+executes on violation. The executed cost per step is
+
+    amortized = local_step_collectives + sync_rate * sync_collective
+
+where ``sync_rate`` = syncs / condition checks, measured by running the
+protocol. This benchmark measures sync_rate across a Delta grid on the
+protocol simulator (the rate depends on the loss landscape, not the model
+size — the paper's adaptivity claim) and reports the multiplier that scales
+the dry-run's worst-case sync term.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import save_rows
+from repro.config import ProtocolConfig, TrainConfig, get_arch
+from repro.core.protocol import DecentralizedLearner
+from repro.data.pipeline import LearnerStreams
+from repro.data.synthetic import SyntheticMNIST
+from repro.models.cnn import cnn_loss, init_cnn_params
+
+NAME = "dynamic_amortized"
+PAPER_REF = "DESIGN.md §2 (expected-case collective term)"
+
+
+def run(quick: bool = True):
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+    m, b = 8, 5
+    rounds = 200 if quick else 600
+    rows = []
+    for delta in (0.1, 0.3, 0.7, 1.5, 3.0):
+        src = SyntheticMNIST(seed=0, image_size=14)
+        streams = LearnerStreams(src, m, batch=10, seed=0)
+        dl = DecentralizedLearner(
+            loss_fn, init_fn, m,
+            ProtocolConfig(kind="dynamic", b=b, delta=delta),
+            TrainConfig(optimizer="sgd", learning_rate=0.1))
+        half_syncs = None
+        for t in range(rounds):
+            dl.step(streams.next())
+            if t == rounds // 2:
+                half_syncs = dl.comm_totals["syncs"]
+        checks = rounds // b
+        syncs = dl.comm_totals["syncs"]
+        rows.append({
+            "delta": delta,
+            "sync_rate": round(syncs / checks, 3),
+            "sync_rate_late_half": round(
+                (syncs - half_syncs) / (checks / 2), 3),
+            "amortized_sync_multiplier": round(syncs / checks, 3),
+            "cumulative_loss": round(dl.cumulative_loss, 1),
+        })
+    save_rows(NAME, rows)
+    return rows
+
+
+def check(rows) -> str:
+    """Sync rate must fall monotonically with Delta, giving an amortized
+    sync-collective multiplier << 1 for the loose-Delta operating points.
+    (Decay *within* a run toward quiescence additionally needs a decaying
+    learning rate — with constant lr the SGD noise floor keeps the
+    divergence rate steady, matching the paper's discussion.)"""
+    rates = [r["sync_rate"] for r in rows]
+    monotone = all(a >= b - 0.05 for a, b in zip(rates, rates[1:]))
+    saves = rows[-1]["sync_rate"] < 0.5
+    return "PASS" if (monotone and saves) else "MIXED"
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,45 @@
+"""Fig. A.6: the protocol is black-box in the learning algorithm phi —
+dynamic averaging's advantage over periodic holds for SGD, ADAM, RMSprop."""
+from __future__ import annotations
+
+from benchmarks.common import run_mnist_protocol, save_rows
+from repro.config import ProtocolConfig
+
+NAME = "figA6_optimizers"
+PAPER_REF = "Appendix A.5, Figure A.6"
+
+
+def run(quick: bool = True):
+    m = 6
+    rounds = 80 if quick else 300
+    rows = []
+    for opt, lr in (("sgd", 0.1), ("adam", 1e-3), ("rmsprop", 1e-3)):
+        for name, proto in [
+            ("periodic_b10", ProtocolConfig(kind="periodic", b=10)),
+            ("dynamic_d0.7", ProtocolConfig(kind="dynamic", b=10, delta=0.7)),
+        ]:
+            dl, traj, acc = run_mnist_protocol(
+                proto, m=m, rounds=rounds, optimizer=opt, lr=lr)
+            rows.append({
+                "optimizer": opt, "protocol": name,
+                "cumulative_loss": round(dl.cumulative_loss, 2),
+                "comm_bytes": dl.comm_bytes(), "accuracy": round(acc, 4),
+            })
+    save_rows(NAME, rows)
+    return rows
+
+
+def check(rows) -> str:
+    ok = True
+    for opt in ("sgd", "adam", "rmsprop"):
+        p = next(r for r in rows
+                 if r["optimizer"] == opt and "periodic" in r["protocol"])
+        d = next(r for r in rows
+                 if r["optimizer"] == opt and "dynamic" in r["protocol"])
+        ok &= d["comm_bytes"] <= p["comm_bytes"]
+    return "PASS" if ok else "MIXED"
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,77 @@
+"""Roofline table: aggregates experiments/dryrun/*.json into the
+per-(arch x shape x mesh) three-term table (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+NAME = "roofline_table"
+PAPER_REF = "deliverable (g)"
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_markdown(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | mode | compute_s | memory_s | coll_s | "
+        "bottleneck | useful | arg GB/chip | temp GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('mode')}"
+                f" | FAILED: {r.get('error', '?')[:60]} | | | | | | |")
+            continue
+        rl = r["roofline"]
+        mem = rl.get("memory_stats", {})
+        uf = rl.get("useful_fraction")
+        lines.append(
+            "| {a} | {s} | {m} | {mo} | {c:.3e} | {me:.3e} | {co:.3e} | "
+            "{b} | {u} | {ag:.2f} | {tg:.2f} |".format(
+                a=r["arch"], s=r["shape"], m=r["mesh"], mo=r["mode"],
+                c=rl["compute_s"], me=rl["memory_s"], co=rl["collective_s"],
+                b=rl["bottleneck"],
+                u=f"{uf:.3f}" if uf else "-",
+                ag=mem.get("argument_bytes", 0) / 1e9,
+                tg=mem.get("temp_bytes", 0) / 1e9))
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "ok": False})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "mode": r["mode"], "ok": True,
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"],
+            "bottleneck": rl["bottleneck"],
+            "useful_fraction": rl.get("useful_fraction"),
+        })
+    return rows
+
+
+def check(rows) -> str:
+    done = [r for r in rows if r.get("ok")]
+    return f"{len(done)}/{len(rows)} compiled" if rows else "NO-DATA"
+
+
+if __name__ == "__main__":
+    print(format_markdown(load_records()))

@@ -1,0 +1,81 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints one CSV block per benchmark plus a summary line
+``name,seconds,claim_check`` and persists per-benchmark JSON under
+experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    dynamic_amortized,
+    fig5_1_dynamic_vs_periodic,
+    fig5_2_fedavg,
+    fig5_4_drift,
+    fig5_5_deepdrive,
+    fig6_1_scaleout,
+    fig6_2_init_heterogeneity,
+    figA6_optimizers,
+    figC_unbalanced,
+    kernel_bench,
+    roofline_table,
+)
+
+ALL = [
+    fig5_1_dynamic_vs_periodic,
+    dynamic_amortized,
+    fig5_2_fedavg,
+    fig5_4_drift,
+    fig5_5_deepdrive,
+    fig6_1_scaleout,
+    fig6_2_init_heterogeneity,
+    figA6_optimizers,
+    figC_unbalanced,
+    kernel_bench,
+    roofline_table,
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    summary = []
+    for mod in ALL:
+        if args.only and args.only not in mod.NAME:
+            continue
+        t0 = time.time()
+        print(f"\n=== {mod.NAME}  [{mod.PAPER_REF}] ===", flush=True)
+        try:
+            rows = mod.run(quick=not args.full)
+            verdict = mod.check(rows)
+            for r in rows:
+                print("  " + ",".join(
+                    f"{k}={v}" for k, v in r.items()
+                    if not isinstance(v, (list, dict))))
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            verdict = f"ERROR:{e!r}"
+        dt = time.time() - t0
+        print(f"  -> {verdict} ({dt:.1f}s)")
+        summary.append((mod.NAME, dt, verdict))
+
+    print("\n==== SUMMARY (name,seconds,claim_check) ====")
+    ok = True
+    for name, dt, verdict in summary:
+        print(f"{name},{dt:.1f},{verdict}")
+        ok &= not str(verdict).startswith("ERROR")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: decentralized training of a ~100M-param LM.
+
+Four "pods" (learners) train a 12-layer / d_model=768 llama-family model on
+disjoint bigram-Markov token streams with the dynamic averaging protocol —
+the full production path (model def -> learner-stacked train state -> the
+SPMD dynamic-averaging step from repro.core.distributed) for a few hundred
+steps on CPU, with checkpointing.
+
+    PYTHONPATH=src python examples/fleet_llm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import save_pytree
+from repro.config import ModelConfig, ProtocolConfig, TrainConfig, get_arch
+from repro.core.distributed import (
+    init_dynamic_state, make_dynamic_train_step)
+from repro.data.synthetic import TokenStream
+from repro.models.model import init_lm_params, lm_loss
+
+M = 4                      # learners ("pods")
+B, S = 4, 128              # per-learner batch
+
+
+def fleet_model(big: bool = False) -> ModelConfig:
+    """~100M-param llama-family model (--big) or a ~25M variant whose
+    60-step run finishes in minutes on one CPU core."""
+    base = get_arch("llama3-8b")
+    if big:
+        return dataclasses.replace(
+            base, name="fleet-llm-100m", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=8192,
+            dtype="float32")
+    return dataclasses.replace(
+        base, name="fleet-llm-25m", num_layers=6, d_model=512,
+        num_heads=8, num_kv_heads=4, d_ff=1408, vocab_size=8192,
+        dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="a few hundred steps converge; the default keeps "
+                         "single-core CPU runtime in minutes")
+    ap.add_argument("--delta", type=float, default=5.0)
+    ap.add_argument("--sync-every", type=int, default=10)
+    ap.add_argument("--big", action="store_true",
+                    help="~100M-param model (the full driver config)")
+    args = ap.parse_args()
+
+    cfg = fleet_model(args.big)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"m={M} learners, batch {B}x{S} tokens each")
+
+    loss_fn = lambda p, b: lm_loss(cfg, p, b)
+    train = TrainConfig(optimizer="adam", learning_rate=3e-4)
+    proto = ProtocolConfig(kind="dynamic", b=args.sync_every,
+                           delta=args.delta)
+    step = jax.jit(make_dynamic_train_step(loss_fn, proto, train, M))
+    state = init_dynamic_state(
+        lambda k: init_lm_params(cfg, k), jax.random.PRNGKey(0), M, train)
+
+    streams = [TokenStream(seed=100 + i, vocab=cfg.vocab_size)
+               for i in range(M)]
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for t in range(args.steps):
+        key, sub = jax.random.split(key)
+        batches = [s.sample(jax.random.fold_in(sub, i), B, S)
+                   for i, s in enumerate(streams)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+        state, metrics = step(state, batch)
+        if (t + 1) % 20 == 0:
+            print(f"step {t+1:4d} loss {float(metrics['loss']):.4f} "
+                  f"syncs {int(state.syncs):3d} "
+                  f"({(t+1)*M*B*S/(time.time()-t0):,.0f} tok/s)")
+
+    save_pytree("experiments/fleet_llm_final.npz",
+                {"params": jax.tree.map(lambda x: x[0], state.params),
+                 "step": state.step})
+    checks = max(int(state.checks), 1)
+    print(f"\ndone: {int(state.syncs)}/{checks} condition checks triggered "
+          f"averaging -> {100*int(state.syncs)/checks:.0f}% of the periodic "
+          f"protocol's communication at the same cadence.")
+    print("checkpoint: experiments/fleet_llm_final.npz")
+
+
+if __name__ == "__main__":
+    main()

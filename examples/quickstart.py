@@ -1,0 +1,45 @@
+"""Quickstart: decentralized training with dynamic model averaging.
+
+Ten learners train the paper's MNIST CNN; the dynamic averaging protocol
+(sigma_Delta) gates every synchronization on the model-divergence local
+conditions, and we compare its communication bill against periodic
+averaging at equal predictive performance.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.config import ProtocolConfig, TrainConfig, get_arch
+from repro.data.synthetic import SyntheticMNIST
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn_params
+from repro.train.loop import run_protocol_training
+
+
+def main():
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+    src = SyntheticMNIST(seed=0, image_size=14)
+
+    results = {}
+    for name, proto in [
+        ("periodic b=10", ProtocolConfig(kind="periodic", b=10)),
+        ("dynamic Δ=0.7", ProtocolConfig(kind="dynamic", b=10, delta=0.7)),
+    ]:
+        dl, traj = run_protocol_training(
+            loss_fn, init_fn, src, m=10, rounds=150, protocol=proto,
+            train=TrainConfig(optimizer="sgd", learning_rate=0.1),
+            batch=10, seed=0)
+        test = src.sample(jax.random.PRNGKey(999), 512)
+        acc = float(cnn_accuracy(cfg, dl.mean_model(), test))
+        results[name] = (dl.cumulative_loss, dl.comm_bytes(), acc)
+        print(f"{name:16s} cumulative_loss={dl.cumulative_loss:9.1f} "
+              f"comm={dl.comm_bytes()/1e6:8.1f}MB accuracy={acc:.3f}")
+
+    (_, comm_p, _), (_, comm_d, _) = results.values()
+    print(f"\ndynamic averaging used {100 * (1 - comm_d / comm_p):.0f}% "
+          f"less communication than periodic averaging.")
+
+
+if __name__ == "__main__":
+    main()

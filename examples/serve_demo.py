@@ -1,0 +1,54 @@
+"""Serving demo: batched prefill + decode against KV / SSM-state caches.
+
+Loads a small llama-family model and a Mamba2 model, feeds a batch of
+prompts, and generates continuations with greedy and temperature sampling —
+the same serve_step the decode dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch
+from repro.models.model import init_lm_params
+from repro.serve.engine import ServeEngine
+
+
+def demo(arch: str, batch: int = 4, prompt_len: int = 16,
+         gen_tokens: int = 32):
+    cfg = get_arch(arch, smoke=True)
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_seq=prompt_len + gen_tokens + 1,
+                      batch=batch)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size)
+    t0 = time.time()
+    logits = eng.feed(prompts)
+    t_prefill = time.time() - t0
+    t0 = time.time()
+    greedy = eng.generate(gen_tokens, first_logits=logits)
+    t_decode = time.time() - t0
+    print(f"{arch:18s} prefill {batch}x{prompt_len} in {t_prefill:.2f}s; "
+          f"decoded {batch}x{gen_tokens} in {t_decode:.2f}s "
+          f"({batch*gen_tokens/t_decode:.0f} tok/s)")
+    print(f"  first continuation: {greedy[0].tolist()}")
+
+    # temperature sampling from a fresh engine
+    eng2 = ServeEngine(cfg, params, max_seq=prompt_len + gen_tokens + 1,
+                       batch=batch)
+    logits = eng2.feed(prompts)
+    sampled = eng2.generate(gen_tokens, key=jax.random.PRNGKey(7),
+                            temperature=0.8, first_logits=logits)
+    print(f"  sampled (T=0.8):    {sampled[0].tolist()}")
+
+
+def main():
+    demo("llama3-8b")        # GQA KV cache
+    demo("mamba2-2.7b")      # O(1) SSM state - the long_500k decode path
+    demo("mixtral-8x22b")    # MoE + sliding-window ring buffer
+
+
+if __name__ == "__main__":
+    main()

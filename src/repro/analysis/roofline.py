@@ -1,0 +1,116 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw
+
+``cost_analysis()`` on the compiled executable reports the per-device
+(post-SPMD-partition) module, so its flops/bytes are already per chip;
+collective wire bytes come from ``repro.analysis.hlo``. MODEL_FLOPS uses
+the 6·N·D rule (N = params, D = tokens; N_active for MoE) to measure how
+much of the compiled compute is useful.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.analysis import hlo as hlo_mod
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+@dataclass
+class RooflineReport:
+    name: str
+    num_devices: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None          # 6*N*D (total, all chips)
+    useful_fraction: Optional[float] = None      # model / (hlo * chips)
+    collectives: dict = field(default_factory=dict)
+    memory_stats: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "name", "num_devices", "flops_per_chip", "bytes_per_chip",
+            "wire_bytes_per_chip", "compute_s", "memory_s", "collective_s",
+            "bottleneck", "model_flops", "useful_fraction", "collectives",
+            "memory_stats")}
+
+
+def model_flops_for(cfg, shape, mode: str) -> float:
+    """6·N·D rule. Train counts fwd+bwd (6ND); prefill 2ND; decode 2N·B."""
+    n = cfg.active_param_count()
+    if mode in ("train", "train_dynamic", "train_periodic"):
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(name: str, compiled, num_devices: int,
+            model_flops: Optional[float] = None,
+            peak_flops: float = PEAK_FLOPS_BF16,
+            hbm_bw: float = HBM_BW,
+            link_bw: float = ICI_BW_PER_LINK) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    stats = hlo_mod.parse_collectives(compiled.as_text(), num_devices)
+    wire = stats.total_wire_bytes
+
+    compute_s = flops / peak_flops
+    memory_s = bytes_acc / hbm_bw
+    collective_s = wire / link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mem = {}
+    try:
+        ms = compiled.memory_analysis()
+        if ms is not None:
+            mem = {
+                "argument_bytes": int(ms.argument_size_in_bytes),
+                "output_bytes": int(ms.output_size_in_bytes),
+                "temp_bytes": int(ms.temp_size_in_bytes),
+                "alias_bytes": int(ms.alias_size_in_bytes),
+            }
+    except Exception:
+        pass
+
+    useful = None
+    if model_flops and flops:
+        useful = model_flops / (flops * num_devices)
+    return RooflineReport(
+        name=name, num_devices=num_devices,
+        flops_per_chip=flops, bytes_per_chip=bytes_acc,
+        wire_bytes_per_chip=wire,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_fraction=useful, collectives=stats.summary(),
+        memory_stats=mem)
+
+
+def format_table(reports) -> str:
+    hdr = (f"{'program':44s} {'chips':>5s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'bneck':>10s} "
+           f"{'useful':>7s} {'arg_GB':>8s} {'temp_GB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        arg = r.memory_stats.get("argument_bytes", 0) / 1e9
+        tmp = r.memory_stats.get("temp_bytes", 0) / 1e9
+        uf = f"{r.useful_fraction:.3f}" if r.useful_fraction else "-"
+        lines.append(
+            f"{r.name:44s} {r.num_devices:5d} {r.compute_s:10.3e} "
+            f"{r.memory_s:10.3e} {r.collective_s:10.3e} {r.bottleneck:>10s} "
+            f"{uf:>7s} {arg:8.2f} {tmp:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,1 @@
+from repro.checkpoint.io import save_pytree, load_pytree, save_protocol_state, load_protocol_state  # noqa: F401

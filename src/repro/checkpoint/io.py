@@ -1,0 +1,97 @@
+"""Checkpointing: pytrees (params, optimizer state, protocol state) <-> npz.
+
+Flat-key encoding: each leaf is stored under its tree path; structure is
+rebuilt on load from the stored key strings, so no pickling is involved and
+files are portable."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+SEP = "|"
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    return f"a:{p}"
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten_with_paths(tree))
+
+
+def _set_nested(root, keys, value):
+    node = root
+    for i, k in enumerate(keys[:-1]):
+        nxt_is_idx = keys[i + 1][0] == "i"
+        k_val = k[1]
+        if isinstance(node, dict):
+            node = node.setdefault(k_val, [] if nxt_is_idx else {})
+        else:  # list
+            while len(node) <= k_val:
+                node.append([] if nxt_is_idx else {})
+            node = node[k_val]
+    last = keys[-1][1]
+    if isinstance(node, dict):
+        node[last] = value
+    else:
+        while len(node) <= last:
+            node.append(None)
+        node[last] = value
+
+
+def load_pytree(path: str):
+    data = np.load(path)
+    root: Any = None
+    items = []
+    for key in data.files:
+        parts = []
+        for seg in key.split(SEP):
+            tag, val = seg[0], seg[2:]
+            parts.append(("i", int(val)) if tag == "i" else ("k", val))
+        items.append((parts, jnp.asarray(data[key])))
+    if not items:
+        return {}
+    if items[0][0][0][0] == "i":
+        root = []
+    else:
+        root = {}
+    for parts, val in items:
+        _set_nested(root, parts, val)
+    return root
+
+
+def save_protocol_state(path: str, params, opt_state, sync_state) -> None:
+    save_pytree(path + ".params.npz", params)
+    save_pytree(path + ".opt.npz", opt_state)
+    save_pytree(path + ".sync.npz", {
+        "ref": sync_state.ref, "v": sync_state.v,
+        "rng": sync_state.rng, "step": sync_state.step,
+    })
+
+
+def load_protocol_state(path: str):
+    from repro.core.operators import SyncState
+    params = load_pytree(path + ".params.npz")
+    opt = load_pytree(path + ".opt.npz")
+    sync = load_pytree(path + ".sync.npz")
+    state = SyncState(ref=sync["ref"], v=sync["v"], rng=sync["rng"],
+                      step=sync["step"])
+    return params, opt, state

@@ -1,0 +1,335 @@
+"""Configuration system for the repro framework.
+
+Dataclass-based, no external deps. A ``ModelConfig`` fully describes one of
+the supported architecture families:
+
+* dense decoder (GQA, optional QKV bias, optional sliding window)
+* MoE decoder (top-k routing, optional shared experts, optional MLA)
+* SSM decoder (Mamba2 / SSD)
+* hybrid decoder (parallel attention + SSM heads, Hymba-style)
+* CNN classifiers / regressors (the paper's own MNIST and deep-driving nets)
+
+``ShapeConfig`` describes one of the assigned input shapes, ``MeshConfig``
+the device mesh, ``ProtocolConfig`` the paper's synchronization protocol and
+``TrainConfig`` the optimizer/loop settings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+BLOCK_ATTN = "attn"
+BLOCK_SSM = "ssm"
+BLOCK_HYBRID = "hybrid"
+
+ATTN_FULL = "full"
+ATTN_SLIDING = "sliding"
+
+MODALITY_TEXT = "text"
+MODALITY_VISION = "vision"   # VLM: stub patch embeddings + text tokens
+MODALITY_AUDIO = "audio"     # audio: decoder over codec tokens (stub frontend)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for the FFN of a block."""
+    num_experts: int = 8
+    num_experts_per_tok: int = 2
+    num_shared_experts: int = 0          # DeepSeek-style always-on experts
+    expert_d_ff: int = 0                 # per-expert hidden dim (0 -> use d_ff)
+    capacity_factor: float = 1.25        # dispatch capacity per expert
+    router_aux_loss_coef: float = 0.01   # load-balance loss weight
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2)."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0                 # 0 -> full-rank queries
+    rope_head_dim: int = 64              # decoupled rope dims per head
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD settings."""
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 64
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                           # dense | moe | ssm | hybrid | vlm | audio | cnn
+    num_layers: int
+    d_model: int
+    num_heads: int = 0                    # 0 for attention-free
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0                     # 0 -> d_model // num_heads
+    block_type: str = BLOCK_ATTN          # attn | ssm | hybrid
+    attn_type: str = ATTN_FULL            # full | sliding
+    sliding_window: int = 4096
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    modality: str = MODALITY_TEXT
+    moe: Optional[MoEConfig] = None
+    moe_layer_period: int = 1             # every k-th layer is MoE (1 = all)
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # CNN-only fields (paper's MNIST / deep-driving nets)
+    cnn_spec: Optional[Tuple[Any, ...]] = None
+    input_shape: Optional[Tuple[int, ...]] = None   # per-example, CNN/MLP only
+    num_outputs: int = 0                            # CNN/MLP head size
+    dtype: str = "float32"
+    source: str = ""                      # citation for the config
+    # scan layers with lax.scan (small HLO). False -> unrolled python loop;
+    # used by the roofline tooling to calibrate per-layer costs, since XLA
+    # cost_analysis counts a while-loop body ONCE regardless of trip count.
+    scan_layers: bool = True
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.block_type == BLOCK_SSM
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode at 500k+ tokens is sub-quadratic / bounded-state."""
+        return (
+            self.block_type in (BLOCK_SSM, BLOCK_HYBRID)
+            or self.attn_type == ATTN_SLIDING
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        if self.family == "cnn":
+            return -1  # computed from the actual pytree instead
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        n = 0
+        # embeddings
+        n += self.vocab_size * d
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        per_layer = 0
+        # norms
+        per_layer += 2 * d
+        if self.block_type in (BLOCK_ATTN, BLOCK_HYBRID):
+            if self.mla is not None:
+                r, rh = self.mla.kv_lora_rank, self.mla.rope_head_dim
+                per_layer += d * (r + rh)                       # kv down + shared rope k
+                per_layer += r * self.num_heads * (hd + hd)     # k/v up
+                if self.mla.q_lora_rank:
+                    per_layer += d * self.mla.q_lora_rank
+                    per_layer += self.mla.q_lora_rank * self.num_heads * (hd + rh)
+                else:
+                    per_layer += d * self.num_heads * (hd + rh)
+                per_layer += self.num_heads * hd * d            # out proj
+            else:
+                per_layer += d * self.num_heads * hd            # q
+                per_layer += 2 * d * self.num_kv_heads * hd     # k, v
+                per_layer += self.num_heads * hd * d            # o
+                if self.qkv_bias:
+                    per_layer += (self.num_heads + 2 * self.num_kv_heads) * hd
+        if self.block_type in (BLOCK_SSM, BLOCK_HYBRID):
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            per_layer += d * 2 * d_in                           # in proj (x, z)
+            per_layer += d * (2 * s.ngroups * s.d_state + nheads)  # B, C, dt proj
+            per_layer += s.d_conv * (d_in + 2 * s.ngroups * s.d_state)
+            per_layer += nheads * 2                             # A_log, D
+            per_layer += d_in * d                               # out proj
+        # FFN
+        if self.is_moe:
+            eff = self.moe.expert_d_ff or self.d_ff
+            n_moe_layers = L // self.moe_layer_period
+            n_dense_layers = L - n_moe_layers
+            per_moe = (self.moe.num_experts + self.moe.num_shared_experts) * 3 * d * eff
+            per_moe += d * self.moe.num_experts                 # router
+            n += n_moe_layers * per_moe + n_dense_layers * (3 * d * self.d_ff)
+            n += L * per_layer
+        else:
+            if self.d_ff:
+                per_layer += 3 * d * self.d_ff                  # swiglu
+            n += L * per_layer
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k + shared)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        eff = self.moe.expert_d_ff or self.d_ff
+        total = self.param_count()
+        n_moe_layers = L // self.moe_layer_period
+        all_exp = (self.moe.num_experts + self.moe.num_shared_experts) * 3 * d * eff
+        act_exp = (self.moe.num_experts_per_tok + self.moe.num_shared_experts) * 3 * d * eff
+        return total - n_moe_layers * (all_exp - act_exp)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes
+
+    def axis_size(self, name: str) -> int:
+        if name not in self.axes:
+            return 1
+        return self.shape[self.axes.index(name)]
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# The paper's protocol
+# ---------------------------------------------------------------------------
+
+PROTO_NOSYNC = "nosync"
+PROTO_PERIODIC = "periodic"
+PROTO_CONTINUOUS = "continuous"
+PROTO_FEDAVG = "fedavg"
+PROTO_DYNAMIC = "dynamic"
+
+
+@dataclass(frozen=True)
+class ProtocolConfig:
+    """Synchronization protocol Π = (φ, σ).
+
+    ``kind`` selects the operator σ; ``b`` is the check/sync period in local
+    steps; ``delta`` the divergence threshold Δ for σ_Δ; ``fedavg_c`` the
+    subsampled fraction C for FedAvg; ``augmentation`` selects the
+    coordinator's balancing strategy for dynamic averaging.
+    """
+    kind: str = PROTO_DYNAMIC
+    b: int = 10
+    delta: float = 0.5
+    fedavg_c: float = 0.3
+    augmentation: str = "max_distance"   # max_distance | random | all
+    weighted: bool = False               # Algorithm 2 (unbalanced B^i)
+    bytes_per_param: int = 4
+
+    def __post_init__(self):
+        assert self.kind in (
+            PROTO_NOSYNC, PROTO_PERIODIC, PROTO_CONTINUOUS,
+            PROTO_FEDAVG, PROTO_DYNAMIC,
+        ), self.kind
+        assert self.b >= 1
+        assert self.delta > 0
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "sgd"                 # sgd | momentum | adam | rmsprop
+    learning_rate: float = 0.1
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    micro_batch: int = 0                   # 0 -> no microbatching
+    remat: bool = True                     # activation checkpointing per layer
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = SINGLE_POD_MESH
+    protocol: ProtocolConfig = ProtocolConfig()
+    train: TrainConfig = TrainConfig()
+    num_learners: int = 1                  # m; learner axis for dynamic mode
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ARCH_REGISTRY: dict = {}
+
+
+def register_arch(name: str, full_fn, smoke_fn) -> None:
+    _ARCH_REGISTRY[name] = (full_fn, smoke_fn)
+
+
+def get_arch(name: str, smoke: bool = False) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers registration)
+    if name not in _ARCH_REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(_ARCH_REGISTRY)}")
+    full_fn, smoke_fn = _ARCH_REGISTRY[name]
+    return smoke_fn() if smoke else full_fn()
+
+
+def list_archs() -> Sequence[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_ARCH_REGISTRY)

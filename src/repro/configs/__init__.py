@@ -1,0 +1,28 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs import (  # noqa: F401
+    internvl2_76b,
+    minitron_4b,
+    musicgen_large,
+    mixtral_8x22b,
+    qwen1_5_110b,
+    mamba2_2_7b,
+    llama3_405b,
+    llama3_8b,
+    llama3_8b_swa,
+    hymba_1_5b,
+    deepseek_v2_236b,
+    paper_models,
+)
+
+ASSIGNED_ARCHS = (
+    "internvl2-76b",
+    "minitron-4b",
+    "musicgen-large",
+    "mixtral-8x22b",
+    "qwen1.5-110b",
+    "mamba2-2.7b",
+    "llama3-405b",
+    "llama3-8b",
+    "hymba-1.5b",
+    "deepseek-v2-236b",
+)

@@ -1,0 +1,7 @@
+# The paper's primary contribution: the dynamic averaging protocol.
+from repro.core.divergence import (  # noqa: F401
+    divergence, sq_distance, local_condition_violated, flat_size,
+    tree_mean, tree_weighted_mean, per_learner_sq_distance,
+)
+from repro.core.protocol import DecentralizedLearner, make_protocol  # noqa: F401
+from repro.core import operators  # noqa: F401

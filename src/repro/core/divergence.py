@@ -1,0 +1,76 @@
+"""Model divergence and local conditions (paper Eq. 2 and Section 3).
+
+All functions treat models as pytrees. A *model configuration* is a pytree
+whose leaves carry a leading learner axis ``m`` (the vmap layout used by the
+simulator): leaf shape ``(m, ...)``.
+
+The divergence of a configuration is
+    delta(f) = 1/m sum_i || f_i - mean(f) ||^2
+and the local condition of learner i w.r.t. reference model r is
+    || f_i - r ||^2 <= Delta.
+
+``sq_distance`` optionally routes through the fused Pallas kernel
+(`repro.kernels.ops.sqdist`) — the protocol's monitoring hot-spot.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flat_size(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_mean(stacked):
+    """Mean over the leading learner axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+
+
+def tree_weighted_mean(stacked, weights):
+    """Weighted mean over the learner axis (Algorithm 2). weights: (m,)."""
+    wsum = jnp.sum(weights)
+
+    def wmean(x):
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * w, axis=0) / wsum.astype(x.dtype)
+
+    return jax.tree.map(wmean, stacked)
+
+
+def sq_distance(a, b, use_kernel: bool = False) -> jnp.ndarray:
+    """|| a - b ||^2 summed over every leaf of two same-structure pytrees."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return sum(
+            kops.sqdist(x.reshape(-1), y.reshape(-1))
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+        )
+    return sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32)))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def per_learner_sq_distance(stacked, ref) -> jnp.ndarray:
+    """(m,) squared distances || f_i - r ||^2; leaves of ``stacked`` carry a
+    leading m axis, ``ref`` is a single model."""
+    def leaf(x, r):
+        d = x.astype(jnp.float32) - r.astype(jnp.float32)[None]
+        return jnp.sum(d.reshape(d.shape[0], -1) ** 2, axis=1)
+    parts = jax.tree.leaves(jax.tree.map(leaf, stacked, ref))
+    return sum(parts)
+
+
+def divergence(stacked) -> jnp.ndarray:
+    """delta(f) = 1/m sum_i || f_i - mean(f) ||^2  (paper Eq. 2)."""
+    mean = tree_mean(stacked)
+    d = per_learner_sq_distance(stacked, mean)
+    return jnp.mean(d)
+
+
+def local_condition_violated(stacked, ref, delta: float) -> jnp.ndarray:
+    """(m,) bool — which learners violate || f_i - r ||^2 > Delta."""
+    return per_learner_sq_distance(stacked, ref) > delta

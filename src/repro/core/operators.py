@@ -1,0 +1,264 @@
+"""Synchronization operators sigma (paper Sections 3-4), jit-compatible.
+
+Every operator acts on a *model configuration*: a pytree whose leaves have a
+leading learner axis ``m``. Operators return
+    (new_config, new_state, CommRecord-pytree)
+where the state carries the reference model ``r``, the violation counter
+``v`` and an rng key, and the comm record counts *model transfers* and
+*scalar messages* as exact integers (bytes = transfers * model_bytes +
+messages * msg_bytes, done in reporting — keeps jit-friendly int32 math).
+
+Implemented operators:
+  * ``nosync``      — identity
+  * ``periodic_b``  — sigma_b: full average every b rounds (b=1: continuous)
+  * ``fedavg``      — sigma_b over a random C-fraction subset (McMahan et al.)
+  * ``dynamic``     — sigma_Delta: local conditions + coordinator balancing
+                      (Algorithm 1), optionally weighted (Algorithm 2)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ProtocolConfig
+from repro.core.divergence import (
+    per_learner_sq_distance, tree_mean, tree_weighted_mean,
+)
+
+
+class SyncState(NamedTuple):
+    ref: object          # reference model r (single-model pytree)
+    v: jnp.ndarray       # violation counter (scalar int32)
+    rng: jnp.ndarray     # PRNG key for subsampling / random augmentation
+    step: jnp.ndarray    # round counter t (scalar int32)
+
+
+class CommRecord(NamedTuple):
+    model_up: jnp.ndarray     # models sent learner -> coordinator
+    model_down: jnp.ndarray   # models sent coordinator -> learner
+    messages: jnp.ndarray     # small control messages (violations, polls)
+    syncs: jnp.ndarray        # 1 if any averaging happened this round
+    full_syncs: jnp.ndarray   # 1 if ALL learners were averaged
+
+    @staticmethod
+    def zero():
+        z = jnp.zeros((), jnp.int32)
+        return CommRecord(z, z, z, z, z)
+
+
+def init_state(ref_model, seed: int = 0) -> SyncState:
+    return SyncState(
+        ref=ref_model,
+        v=jnp.zeros((), jnp.int32),
+        rng=jax.random.PRNGKey(seed),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _tree_select(mask, new, old):
+    """Per-learner select: leaf (m, ...) <- new where mask[i] else old."""
+    def sel(n, o):
+        m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def _broadcast_model(model, m: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), model)
+
+
+def _masked_mean(stacked, mask, weights=None):
+    """Mean of the masked subset of learners (optionally B^i-weighted)."""
+    w = mask.astype(jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    return tree_weighted_mean(stacked, w)
+
+
+def _num_learners(stacked) -> int:
+    return jax.tree.leaves(stacked)[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# trivial operators
+# ---------------------------------------------------------------------------
+
+def nosync(cfg: ProtocolConfig, stacked, state: SyncState):
+    return stacked, state._replace(step=state.step + 1), CommRecord.zero()
+
+
+def periodic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None):
+    """sigma_b: replace every model by the global mean every b rounds."""
+    m = _num_learners(stacked)
+    t = state.step + 1
+
+    def sync(_):
+        mean = (_masked_mean(stacked, jnp.ones((m,), bool), weights)
+                if weights is not None else tree_mean(stacked))
+        newcfg = _broadcast_model(mean, m)
+        rec = CommRecord(
+            model_up=jnp.int32(m), model_down=jnp.int32(m),
+            messages=jnp.int32(0), syncs=jnp.int32(1), full_syncs=jnp.int32(1))
+        return newcfg, mean, rec
+
+    def skip(_):
+        return stacked, state.ref, CommRecord.zero()
+
+    do = (t % cfg.b) == 0
+    newcfg, ref, rec = jax.lax.cond(do, sync, skip, None)
+    return newcfg, state._replace(ref=ref, step=t), rec
+
+
+def fedavg(cfg: ProtocolConfig, stacked, state: SyncState, weights=None):
+    """sigma_b on a random subset of ceil(C*m) learners (McMahan et al. '17)."""
+    m = _num_learners(stacked)
+    t = state.step + 1
+    k = max(1, int(round(cfg.fedavg_c * m)))
+
+    def sync(rng):
+        rng, sub = jax.random.split(rng)
+        perm = jax.random.permutation(sub, m)
+        mask = jnp.zeros((m,), bool).at[perm[:k]].set(True)
+        mean = _masked_mean(stacked, mask, weights)
+        newcfg = _tree_select(mask, _broadcast_model(mean, m), stacked)
+        rec = CommRecord(
+            model_up=jnp.int32(k), model_down=jnp.int32(k),
+            messages=jnp.int32(0), syncs=jnp.int32(1),
+            full_syncs=jnp.int32(1 if k == m else 0))
+        return newcfg, mean, rec, rng
+
+    def skip(rng):
+        return stacked, state.ref, CommRecord.zero(), rng
+
+    do = (t % cfg.b) == 0
+    newcfg, ref, rec, rng = jax.lax.cond(do, sync, skip, state.rng)
+    return newcfg, state._replace(ref=ref, rng=rng, step=t), rec
+
+
+# ---------------------------------------------------------------------------
+# dynamic averaging (Algorithm 1 / Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def _balance(cfg: ProtocolConfig, stacked, ref, violated, rng, weights=None):
+    """Coordinator balancing: augment the violator set B until the partial
+    average re-enters the safe zone ||mean_B - r||^2 <= Delta or B = [m].
+
+    Returns (final mask B, mean_B, polls) where polls counts coordinator
+    queries to non-violating nodes (each poll = 1 model up).
+    """
+    m = _num_learners(stacked)
+    dists = per_learner_sq_distance(stacked, ref)     # (m,) — augment priority
+
+    if cfg.augmentation == "random":
+        prio = jax.random.uniform(rng, (m,))
+    elif cfg.augmentation == "max_distance":
+        prio = dists
+    else:  # "all": jump straight to full sync on any violation
+        prio = jnp.full((m,), jnp.inf)
+
+    def mean_dist(mask):
+        mean = _masked_mean(stacked, mask, weights)
+        d = sum(
+            jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
+            for a, b in zip(jax.tree.leaves(mean), jax.tree.leaves(ref)))
+        return mean, d
+
+    if cfg.augmentation == "all":
+        full = jnp.ones((m,), bool)
+        mean, _ = mean_dist(full)
+        polls = jnp.int32(m) - jnp.sum(violated).astype(jnp.int32)
+        return full, mean, polls
+
+    _, d0 = mean_dist(violated)
+
+    def cond(carry):
+        mask, d, _ = carry
+        return jnp.logical_and(~jnp.all(mask), d > cfg.delta)
+
+    def body(carry):
+        mask, _, polls = carry
+        cand = jnp.where(mask, -jnp.inf, prio)
+        nxt = jnp.argmax(cand)
+        mask = mask.at[nxt].set(True)
+        _, d = mean_dist(mask)
+        return mask, d, polls + 1
+
+    mask, _, polls = jax.lax.while_loop(cond, body, (violated, d0, jnp.int32(0)))
+    mean = _masked_mean(stacked, mask, weights)
+    return mask, mean, polls
+
+
+def dynamic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None):
+    """sigma_Delta with local conditions and balancing (Algorithm 1; with
+    ``weights`` = B^i it is Algorithm 2 for unbalanced sampling rates)."""
+    m = _num_learners(stacked)
+    t = state.step + 1
+
+    def check(args):
+        stacked, state = args
+        dists = per_learner_sq_distance(stacked, state.ref)
+        violated = dists > cfg.delta
+        nviol = jnp.sum(violated).astype(jnp.int32)
+
+        def no_violation(rng):
+            return (stacked, state.ref, state.v,
+                    CommRecord(jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                               jnp.int32(0), jnp.int32(0)), rng)
+
+        def violation(rng):
+            rng, sub = jax.random.split(rng)
+            v_new = state.v + nviol
+            # if the counter reaches m, force a full sync and reset it
+            force_full = v_new >= m
+            base = jnp.where(force_full, jnp.ones((m,), bool), violated)
+            v_reset = jnp.where(force_full, jnp.int32(0), v_new)
+            mask, mean, polls = _balance(cfg, stacked, state.ref, base, sub, weights)
+            full = jnp.all(mask)
+            v_final = jnp.where(full, jnp.int32(0), v_reset)
+            newcfg = _tree_select(mask, _broadcast_model(mean, m), stacked)
+            # reference model updates only on full sync (Algorithm 1)
+            new_ref = jax.tree.map(
+                lambda a, b: jnp.where(full, a, b), mean, state.ref)
+            nsync = jnp.sum(mask).astype(jnp.int32)
+            rec = CommRecord(
+                model_up=nsync,          # violators push + coordinator polls
+                model_down=nsync,        # partial average pushed back to B
+                messages=nviol + polls,  # violation notices + poll requests
+                syncs=jnp.int32(1),
+                full_syncs=full.astype(jnp.int32))
+            return (newcfg, new_ref, v_final, rec, rng)
+
+        newcfg, ref, v, rec, rng = jax.lax.cond(
+            nviol > 0, violation, no_violation, state.rng)
+        return newcfg, state._replace(ref=ref, v=v, rng=rng, step=t), rec
+
+    def skip(args):
+        stacked, state = args
+        return stacked, state._replace(step=t), CommRecord.zero()
+
+    do = (t % cfg.b) == 0
+    return jax.lax.cond(do, check, skip, (stacked, state))
+
+
+OPERATORS = {
+    "nosync": nosync,
+    "periodic": periodic,
+    "continuous": periodic,     # cfg.b == 1
+    "fedavg": fedavg,
+    "dynamic": dynamic,
+}
+
+
+def apply_operator(cfg: ProtocolConfig, stacked, state: SyncState, weights=None):
+    op = OPERATORS[cfg.kind]
+    if cfg.kind == "nosync":
+        return op(cfg, stacked, state)
+    if not cfg.weighted:
+        weights = None
+    return op(cfg, stacked, state, weights)

@@ -1,0 +1,122 @@
+"""Dynamic averaging via ``jax.shard_map`` — manual-collective form.
+
+The GSPMD path (``repro.core.distributed``) expresses the protocol with a
+learner-stacked pytree and lets the partitioner derive the collectives.
+This module is the explicit dual: the learner axis is a *manual* mesh axis,
+every rank holds ITS OWN model replica, and the paper's operations are
+spelled as named collectives —
+
+    local condition   ||theta_i - r||^2 > Delta        (rank-local scalar)
+    violation vote    jax.lax.pmax(violated, "learner") (1 flag)
+    synchronization   jax.lax.pmean(params, "learner")  (the weight average)
+
+matching Algorithm 1's communication structure literally: zero bytes while
+all local conditions hold, one all-reduce when any fires (the B = [m]
+branch — partial balancing degenerates for pod-scale m, DESIGN.md §2).
+
+Used for cross-validation against the GSPMD path (same numerics) and as
+the reference for how the protocol maps onto explicit TPU collectives.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ProtocolConfig, TrainConfig
+from repro.optim import make_optimizer
+
+
+class ShardMapState(NamedTuple):
+    params: Any      # leaves (m, ...) — learner-sharded
+    opt_state: Any
+    ref: Any         # reference model r (replicated)
+    step: jnp.ndarray
+    syncs: jnp.ndarray
+
+
+def _sq_dist(a, b):
+    return sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32)))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def make_shardmap_dynamic_step(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    proto: ProtocolConfig,
+    train: TrainConfig,
+    mesh,
+    axis: str = "learner",
+):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``state.params`` leaves carry a leading m axis sharded over ``axis``;
+    inside the shard_map body each rank sees its own (1, ...) slice.
+    """
+    opt = make_optimizer(train)
+
+    def body(params, opt_state, ref, step, syncs, batch):
+        # strip the per-rank leading axis of size 1
+        p = jax.tree.map(lambda x: x[0], params)
+        o = jax.tree.map(lambda x: x[0], opt_state)
+        r = jax.tree.map(lambda x: x[0], ref)
+        b = jax.tree.map(lambda x: x[0], batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p, b)
+        p, o = opt.update(p, grads, o)
+        t = step[0] + 1
+
+        def check(args):
+            p, r = args
+            violated = _sq_dist(p, r) > proto.delta           # rank-local
+            any_viol = jax.lax.pmax(
+                violated.astype(jnp.int32), axis)             # 1-flag vote
+
+            def sync(p):
+                return jax.lax.pmean(p, axis)                 # weight average
+
+            p_new = jax.lax.cond(any_viol > 0, sync, lambda p: p, p)
+            r_new = jax.tree.map(
+                lambda a, c: jnp.where(any_viol > 0, a, c), p_new, r)
+            return p_new, r_new, any_viol
+
+        def skip(args):
+            p, r = args
+            return p, r, jnp.int32(0)
+
+        p, r, did = jax.lax.cond((t % proto.b) == 0, check, skip, (p, r))
+        mean_loss = jax.lax.pmean(loss, axis)
+        expand = lambda x: x[None]
+        return (jax.tree.map(expand, p), jax.tree.map(expand, o),
+                jax.tree.map(expand, r), t[None], (syncs[0] + did)[None],
+                mean_loss[None])
+
+    m_spec = P(axis)
+    rep = P(axis)  # ref/scalars are carried learner-stacked for simplicity
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(m_spec, m_spec, m_spec, m_spec, m_spec, m_spec),
+        out_specs=(m_spec, m_spec, m_spec, m_spec, m_spec, m_spec),
+        check_vma=False)
+
+    def step(state: ShardMapState, batch):
+        params, opt_state, ref, t, syncs, loss = fn(
+            state.params, state.opt_state, state.ref, state.step,
+            state.syncs, batch)
+        new = ShardMapState(params, opt_state, ref, t, syncs)
+        return new, {"loss": jnp.mean(loss), "syncs": syncs}
+
+    return step
+
+
+def init_shardmap_state(init_fn, key, m: int, train: TrainConfig,
+                        proto: ProtocolConfig) -> ShardMapState:
+    base = init_fn(key)
+    stack = lambda x: jnp.broadcast_to(x[None], (m,) + x.shape)
+    params = jax.tree.map(stack, base)
+    opt = make_optimizer(train)
+    opt_state = jax.vmap(opt.init)(params)
+    z = jnp.zeros((m,), jnp.int32)
+    return ShardMapState(params, opt_state, jax.tree.map(stack, base), z, z)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticMNIST, GraphicalModelStream, TokenStream, DeepDriveStream,
+)
+from repro.data.pipeline import LearnerStreams  # noqa: F401

@@ -1,0 +1,52 @@
+"""Per-learner streaming batches (paper Section 2 setting).
+
+``LearnerStreams`` wraps a data source and yields, each round t, a pytree of
+batches with leading (m, B, ...) leaves — learner i's sample E_t^i. Supports
+unbalanced sampling rates B^i (Appendix C / Algorithm 2) by padding to
+max(B^i) with repeated samples and exposing per-learner weights.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class LearnerStreams:
+    def __init__(self, source, m: int, batch: int = 10, seed: int = 0,
+                 batch_sizes: Optional[Sequence[int]] = None, **sample_kw):
+        self.source = source
+        self.m = m
+        self.batch = batch
+        self.batch_sizes = batch_sizes
+        self.sample_kw = sample_kw
+        self._key = jax.random.PRNGKey(seed ^ 0x5EED)
+        self._round = 0
+
+    @property
+    def weights(self) -> Optional[jnp.ndarray]:
+        if self.batch_sizes is None:
+            return None
+        return jnp.asarray(self.batch_sizes, jnp.float32)
+
+    def next(self):
+        """Batches for one round: leaves (m, B, ...)."""
+        self._key, sub = jax.random.split(self._key)
+        keys = jax.random.split(sub, self.m)
+        if self.batch_sizes is None:
+            batches = [self.source.sample(k, self.batch, **self.sample_kw)
+                       for k in keys]
+        else:
+            bmax = max(self.batch_sizes)
+            batches = []
+            for k, bi in zip(keys, self.batch_sizes):
+                b = self.source.sample(k, bi, **self.sample_kw)
+                if bi < bmax:
+                    reps = -(-bmax // bi)
+                    b = jax.tree.map(
+                        lambda x: jnp.tile(
+                            x, (reps,) + (1,) * (x.ndim - 1))[:bmax], b)
+                batches.append(b)
+        self._round += 1
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)

@@ -1,0 +1,163 @@
+"""Synthetic data sources (the container is offline — no dataset downloads).
+
+* ``SyntheticMNIST`` — an MNIST-like 10-class image task: class templates
+  (blurred random blobs) + per-sample noise and random shifts. Learnable to
+  high accuracy by the paper's CNN, which is what the protocol experiments
+  need (the paper's claims concern communication dynamics, not MNIST
+  itself).
+* ``GraphicalModelStream`` — the paper's concept-drift source (App. A.3):
+  binary labels from a random linear-Gaussian graphical model over R^50
+  [Bshouty & Long 2012]; a *drift* resamples the generating model. Drifts
+  trigger at random with probability p per round (paper: p = 0.001).
+* ``TokenStream`` — LM token stream from a sampled bigram Markov chain, for
+  decentralized LLM training examples; drift resamples the chain.
+* ``DeepDriveStream`` — front-camera-like frames (procedural road curves) +
+  steering-angle targets for the deep-driving case study.
+
+All sources are deterministic given a seed, support per-learner streams
+(learner i gets an independent slice of the distribution) and a shared
+underlying concept so data is iid across learners (the paper's assumption).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticMNIST:
+    """10-class 28x28 images from class templates + noise + translation."""
+
+    def __init__(self, seed: int = 0, num_classes: int = 10,
+                 image_size: int = 28, noise: float = 0.35):
+        self.num_classes = num_classes
+        self.image_size = image_size
+        self.noise = noise
+        rng = np.random.RandomState(seed)
+        # smooth class templates: random low-frequency patterns
+        freqs = rng.randn(num_classes, 4, 4)
+        t = np.linspace(0, 2 * np.pi, image_size)
+        basis = np.stack([np.sin((i + 1) * t / 2) for i in range(4)])  # (4,S)
+        self.templates = np.einsum("cij,ih,jw->chw", freqs, basis, basis)
+        self.templates /= np.abs(self.templates).max(axis=(1, 2), keepdims=True)
+
+    def sample(self, key, batch: int):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        labels = jax.random.randint(k1, (batch,), 0, self.num_classes)
+        temps = jnp.asarray(self.templates, jnp.float32)[labels]       # (B,H,W)
+        shift = jax.random.randint(k2, (batch, 2), -2, 3)
+        temps = jax.vmap(lambda img, s: jnp.roll(img, s, axis=(0, 1)))(temps, shift)
+        imgs = temps + self.noise * jax.random.normal(k3, temps.shape)
+        return {"x": imgs[..., None], "y": labels}
+
+
+class GraphicalModelStream:
+    """Random linear-Gaussian graphical model over R^d, binary labels.
+
+    A concept is (W, w): latent h ~ N(0, I_k), x = W h + noise,
+    y = sign(w . h). ``maybe_drift`` resamples the concept with prob. p.
+    """
+
+    def __init__(self, seed: int = 0, d: int = 50, k: int = 10,
+                 drift_prob: float = 0.001):
+        self.d, self.k = d, k
+        self.drift_prob = drift_prob
+        self._rng = np.random.RandomState(seed)
+        self._resample()
+        self.drift_count = 0
+
+    def _resample(self):
+        self.W = jnp.asarray(self._rng.randn(self.d, self.k) / np.sqrt(self.k),
+                             jnp.float32)
+        self.w = jnp.asarray(self._rng.randn(self.k), jnp.float32)
+
+    def maybe_drift(self) -> bool:
+        if self._rng.rand() < self.drift_prob:
+            self._resample()
+            self.drift_count += 1
+            return True
+        return False
+
+    def force_drift(self):
+        self._resample()
+        self.drift_count += 1
+
+    def sample(self, key, batch: int):
+        k1, k2 = jax.random.split(key)
+        h = jax.random.normal(k1, (batch, self.k))
+        x = h @ self.W.T + 0.1 * jax.random.normal(k2, (batch, self.d))
+        y = (h @ self.w > 0).astype(jnp.int32)
+        return {"x": x, "y": y}
+
+
+class TokenStream:
+    """Bigram-Markov token stream for LM training; drift resamples the chain."""
+
+    def __init__(self, seed: int = 0, vocab: int = 512, temp: float = 1.0):
+        self.vocab = vocab
+        self._rng = np.random.RandomState(seed)
+        self.temp = temp
+        self._resample()
+
+    def _resample(self):
+        logits = self._rng.randn(self.vocab, self.vocab) * self.temp
+        self.logits = jnp.asarray(logits, jnp.float32)
+
+    def force_drift(self):
+        self._resample()
+
+    def sample(self, key, batch: int, seq_len: int):
+        def chain(k):
+            k0, k = jax.random.split(k)
+            first = jax.random.randint(k0, (), 0, self.vocab)
+
+            def step(tok, kk):
+                nxt = jax.random.categorical(kk, self.logits[tok])
+                return nxt, nxt
+
+            _, toks = jax.lax.scan(step, first, jax.random.split(k, seq_len))
+            return jnp.concatenate([first[None], toks[:-1]]), toks
+
+        keys = jax.random.split(key, batch)
+        tokens, labels = jax.vmap(chain)(keys)
+        return {"tokens": tokens, "labels": labels}
+
+
+class DeepDriveStream:
+    """Procedural road frames -> steering angle (deep-driving case study).
+
+    A 'road' is a quadratic curve; the frame renders the road as bright
+    pixels on a dark background from a forward-looking viewpoint; the target
+    steering angle is proportional to the curvature ahead. Concept drift =
+    changing road texture/curvature statistics (e.g. a new country).
+    """
+
+    def __init__(self, seed: int = 0, height: int = 68, width: int = 320,
+                 curvature_scale: float = 1.0):
+        self.h, self.w = height, width
+        self._rng = np.random.RandomState(seed)
+        self.curvature_scale = curvature_scale
+
+    def force_drift(self):
+        self.curvature_scale = float(self._rng.uniform(0.5, 2.0))
+
+    def sample(self, key, batch: int):
+        k1, k2, k3 = jax.random.split(key, 3)
+        curv = self.curvature_scale * jax.random.normal(k1, (batch,)) * 0.3
+        offset = jax.random.normal(k2, (batch,)) * 0.2
+        ys = jnp.linspace(1.0, 0.0, self.h)                   # depth rows
+        xs = jnp.linspace(-1.0, 1.0, self.w)
+
+        def frame(c, o):
+            center = o + c * (1.0 - ys) ** 2                  # (h,)
+            halfw = 0.08 + 0.5 * ys                           # road widens nearby
+            img = jnp.exp(-((xs[None, :] - center[:, None]) / halfw[:, None]) ** 2)
+            return img
+
+        imgs = jax.vmap(frame)(curv, offset)
+        imgs = imgs + 0.05 * jax.random.normal(k3, imgs.shape)
+        rgb = jnp.stack([imgs, imgs * 0.8, imgs * 0.6], axis=-1)
+        steering = -2.0 * curv - 0.5 * offset                 # steer against curve
+        return {"x": rgb, "y": steering}

@@ -1,0 +1,80 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs in Python for correctness validation; on a TPU
+backend the same ``pallas_call`` compiles to Mosaic. ``_interp()`` picks
+automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.sqdist import sqdist as _sqdist
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sqdist(x, r, *, block: int = 65536):
+    return _sqdist(x, r, block=block, interpret=_interp())
+
+
+def tree_sqdist(tree_a, tree_b, *, block: int = 65536):
+    """||a - b||^2 summed over a whole pytree (the local condition on a
+    full model)."""
+    return sum(
+        sqdist(x, y, block=block)
+        for x, y in zip(jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)))
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128):
+    return _rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                    interpret=_interp())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, block_q: int = 128, block_k: int = 128):
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  block_q=block_q, block_k=block_k, interpret=_interp())
+
+
+def flash_attention_gqa(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale=None, block_q: int = 128, block_k: int = 128):
+    """GQA front-end: q (B, S, H, d), k/v (B, S, Hkv, d).
+
+    Folds (B, Hkv, group) into the kernel's batch grid axis so each kv head
+    is staged once per group."""
+    B, Sq, H, d = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    Sk = k.shape[1]
+    qg = q.reshape(B, Sq, Hkv, G, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(B * Hkv * G, Sq, d)
+    kg = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * Hkv * G, Sk, d)
+    vg = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * Hkv * G, Sk, d)
+    out = flash_attention(qg, kg, vg, causal=causal, window=window,
+                          scale=scale, block_q=block_q, block_k=block_k)
+    out = out.reshape(B, Hkv, G, Sq, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, H, d)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 64):
+    """Chunked SSD over (BH, S, *) layouts; pads S to a chunk multiple."""
+    S = x.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, h = _ssd(x, dt, a, b, c, chunk=chunk, interpret=_interp())
+    if pad:
+        y = y[:, :S]
+    return y, h

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sqdist_ref(x, r):
+    """||x - r||^2 in f32. x, r: any same-shape arrays."""
+    d = x.astype(jnp.float32) - r.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    """Row-wise RMS normalization. x: (..., D), scale: (D,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """Masked softmax attention. q: (B, Sq, d), k/v: (B, Sk, d).
+
+    ``window`` > 0 adds sliding-window masking (positions are 0..S-1 with
+    q-position offset so Sq == Sk aligns the diagonals).
+    """
+    B, Sq, d = q.shape
+    Sk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b, c, *, chunk: int = 0):
+    """Sequential (non-chunked) SSD reference.
+
+    x: (BH, S, P) inputs; dt: (BH, S) step sizes (>0); a: (BH,) negative
+    decay rates; b, c: (BH, S, N). Returns (y (BH, S, P), h (BH, P, N)):
+        h_t = exp(dt_t * a) h_{t-1} + dt_t * x_t b_t^T,   y_t = h_t^T... c_t
+    (y_t[p] = sum_n h_t[p, n] c_t[n]).
+    """
+    del chunk
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def one(xh, dth, ah, bh, ch):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * ah) * h + dtt * (xt[:, None] * bt[None, :])
+            y = h @ ct                       # (P,)
+            return h, y
+
+        h0 = jnp.zeros((xh.shape[-1], bh.shape[-1]), jnp.float32)
+        h, ys = jax.lax.scan(step, h0, (xh, dth, bh, ch))
+        return ys, h
+
+    y, h = jax.vmap(one)(xf, dtf, af, bf, cf)
+    return y.astype(x.dtype), h

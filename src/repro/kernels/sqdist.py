@@ -1,0 +1,55 @@
+"""Fused squared-distance reduction kernel — the protocol's monitoring
+hot-spot: every learner evaluates ``||theta - r||^2`` every b steps
+(Algorithm 1's local condition).
+
+One HBM pass: each grid step stages a (1, block) tile of both vectors into
+VMEM, accumulates ``sum((x - r)^2)`` in f32 into a (1, 1) output tile that
+every grid step maps to (TPU grid iteration is sequential, so the
+accumulation is race-free). No materialized difference tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sqdist_kernel(x_ref, r_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = x_ref[...].astype(jnp.float32) - r_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(d * d)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sqdist(x, r, *, block: int = 65536, interpret: bool = True):
+    """||x - r||^2 over flattened inputs. Pads to a block multiple with
+    equal values (zero contribution)."""
+    xf = x.reshape(-1)
+    rf = r.reshape(-1)
+    n = xf.shape[0]
+    pad = (-n) % block
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+        rf = jnp.pad(rf, (0, pad))
+    nb = xf.shape[0] // block
+    x2 = xf.reshape(nb, block)
+    r2 = rf.reshape(nb, block)
+    out = pl.pallas_call(
+        _sqdist_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x2, r2)
+    return out[0, 0]

@@ -1,0 +1,1 @@
+"""Launcher: production meshes, sharding rules, input specs, dry-run."""

@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) program.
+
+The two lines above run before ANY other import (jax locks the device count
+on first init): the dry-run — and only the dry-run — sees 512 placeholder
+host devices so ``jax.make_mesh`` can build the production meshes.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out-dir experiments/dryrun
+    python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k \
+        --mesh multi --mode train_dynamic
+
+Per program it prints/records ``compiled.memory_analysis()`` (proves the
+per-device footprint), ``compiled.cost_analysis()`` (FLOPs/bytes for the
+roofline) and the parsed collective schedule.
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline as rl
+from repro.config import INPUT_SHAPES, get_arch
+from repro.configs import ASSIGNED_ARCHS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_program
+
+# long_500k needs sub-quadratic decode; pure full-attention archs skip it
+# (DESIGN.md §Arch-applicability). llama3-8b-swa is the sliding-window
+# VARIANT of a dense arch that makes the 524k shape tractable (the
+# assignment's dense-arch carve-out).
+LONG_CONTEXT_ARCHS = (
+    "mamba2-2.7b", "hymba-1.5b", "mixtral-8x22b", "llama3-8b-swa")
+
+
+def pairs_for(arch: str):
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+            continue
+        yield shape
+
+
+def _compile(cfg, shape, mesh, mode):
+    prog = build_program(cfg, shape, mesh, mode=mode)
+    with mesh:
+        lowered = jax.jit(
+            prog.fn, in_shardings=prog.in_shardings,
+            out_shardings=prog.out_shardings).lower(*prog.args)
+        compiled = lowered.compile()
+    return prog, compiled
+
+
+def _costs(compiled, mesh) -> tuple:
+    ca = compiled.cost_analysis() or {}
+    stats = __import__("repro.analysis.hlo", fromlist=["hlo"]).parse_collectives(
+        compiled.as_text(), mesh.size)
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(stats.total_wire_bytes))
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, mode: str = "auto",
+            verbose: bool = True, calibrate: bool = True) -> dict:
+    """Lower+compile one (arch, shape, mesh) program and derive its roofline.
+
+    XLA's cost analysis counts a ``while``-loop body once regardless of trip
+    count, so the scan-over-layers model under-reports per-step cost. We
+    therefore compile the REAL program (scan, full depth) for the artifact +
+    memory analysis, plus two small UNROLLED variants (1 and 2 layers) whose
+    cost difference calibrates the true per-layer flops/bytes/collectives:
+        total(L) = cost(L=1) + (L - 1) * (cost(L=2) - cost(L=1)).
+    """
+    import dataclasses
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    prog, compiled = _compile(cfg, shape, mesh, mode)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    report = rl.analyze(
+        f"{prog.name}@{mesh_kind}", compiled, mesh.size,
+        model_flops=rl.model_flops_for(cfg, shape, prog.meta["mode"]))
+
+    if calibrate:
+        c1cfg = dataclasses.replace(cfg, num_layers=1, scan_layers=False)
+        c2cfg = dataclasses.replace(cfg, num_layers=2, scan_layers=False)
+        _, comp1 = _compile(c1cfg, shape, mesh, mode)
+        _, comp2 = _compile(c2cfg, shape, mesh, mode)
+        f1, b1, w1 = _costs(comp1, mesh)
+        f2, b2, w2 = _costs(comp2, mesh)
+        L = cfg.num_layers
+        report.flops_per_chip = f1 + (L - 1) * max(f2 - f1, 0.0)
+        report.bytes_per_chip = b1 + (L - 1) * max(b2 - b1, 0.0)
+        report.wire_bytes_per_chip = w1 + (L - 1) * max(w2 - w1, 0.0)
+        report.compute_s = report.flops_per_chip / rl.PEAK_FLOPS_BF16
+        report.memory_s = report.bytes_per_chip / rl.HBM_BW
+        report.collective_s = report.wire_bytes_per_chip / rl.ICI_BW_PER_LINK
+        terms = {"compute": report.compute_s, "memory": report.memory_s,
+                 "collective": report.collective_s}
+        report.bottleneck = max(terms, key=terms.get)
+        if report.model_flops:
+            report.useful_fraction = report.model_flops / (
+                report.flops_per_chip * mesh.size)
+        del comp1, comp2
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mode": prog.meta["mode"], "num_devices": mesh.size,
+        "compile_s": round(t_compile, 2),
+        "ok": True,
+        "calibrated": calibrate,
+        "roofline": report.as_dict(),
+    }
+    if verbose:
+        print(f"== {prog.name} @ {mesh_kind} ({mesh.size} chips) ==")
+        print(f"   compile {t_compile:.1f}s")
+        print(f"   memory_analysis: {mem}")
+        print(f"   flops/chip={report.flops_per_chip:.3e} "
+              f"bytes/chip={report.bytes_per_chip:.3e} "
+              f"wire/chip={report.wire_bytes_per_chip:.3e}")
+        print(f"   terms: compute={report.compute_s:.3e}s "
+              f"memory={report.memory_s:.3e}s "
+              f"collective={report.collective_s:.3e}s "
+              f"-> bottleneck={report.bottleneck}")
+        print(f"   collectives: {report.collectives['by_kind']}")
+    del compiled
+    gc.collect()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--mode", default="auto")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        if args.mode.startswith("train"):
+            jobs = [(a, "train_4k") for a in ASSIGNED_ARCHS]
+        else:
+            jobs = [(a, s) for a in ASSIGNED_ARCHS for s in pairs_for(a)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        jobs = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in jobs:
+        for mk in meshes:
+            tag = f"{arch}_{shape}_{mk}_{args.mode}".replace("/", "-")
+            path = os.path.join(args.out_dir, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"-- skip {tag} (exists)")
+                continue
+            try:
+                rec = run_one(arch, shape, mk, args.mode)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "mesh": mk,
+                       "mode": args.mode, "ok": False, "error": repr(e)}
+                failures.append(tag)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete:", len(jobs), "pairs x", len(meshes), "meshes")
+
+
+if __name__ == "__main__":
+    main()

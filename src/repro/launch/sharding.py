@@ -1,0 +1,225 @@
+"""Sharding rules: param/state/batch PartitionSpecs for the production mesh.
+
+Baseline layout (= continuous/periodic averaging data-parallel training,
+consistent with the paper's Proposition 3):
+
+* 2-D weights ``(d_in, d_out)``: FSDP over ``data`` on d_in, tensor-parallel
+  over ``model`` on d_out (reversed for the row-parallel output projections
+  ``w_o`` / ``w_down`` / ``w_out``).
+* MoE expert tables ``(E, d, f)``: experts replicated in ID space, (d, f)
+  sharded over (data, model) — the capacity-bucketed dispatch then induces
+  the all-to-all-equivalent resharding under GSPMD.
+* Embedding ``(V, d)``: vocab over ``model``, d over ``data``.
+* Batch: ``("pod", "data")`` (or ``("data",)`` single-pod) on the leading
+  batch dim.
+* Dynamic-averaging state: a leading learner axis ``m`` sharded over
+  ``pod`` — each pod is one of the paper's learners.
+
+Every rule is guarded by divisibility: an axis is applied only when the dim
+is divisible by the mesh axis size (e.g. hymba's 25 heads or mamba2's 50280
+vocab simply stay unsharded on that dim).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+
+# core trailing-dim specs by leaf name: logical axis names per trailing dim,
+# counted from the RIGHT (leading L / learner axes are padded with None).
+_COL = ("fsdp", "tp")        # (d_in, d_out) column-parallel
+_ROW = ("tp", "fsdp")        # (d_in, d_out) row-parallel
+_CORE_SPECS = {
+    # attention / generic projections
+    "w_q": _COL, "w_k": _COL, "w_v": _COL, "w_o": _ROW,
+    "w_dq": _COL, "w_uq": _COL, "w_dkv": _COL, "w_krope": _COL,
+    "w_uk": _COL, "w_uv": _COL,
+    # ffn
+    "w_gate": _COL, "w_up": _COL, "w_down": _ROW,
+    # ssm
+    "w_xz": _COL, "w_bc": _COL, "w_dt": _COL, "w_out": _ROW,
+    "conv_w": (None, "tp"),
+    # router
+    "router": ("fsdp", None),
+    # embeddings / head
+    "embed": ("tp", "fsdp"),
+    "lm_head": ("fsdp", "tp"),
+    # cnn/mlp
+    "w": _COL, "kernel": (None, None, "fsdp", "tp"),
+    # 1-D / small leaves
+    "scale": (None,), "bias": (None,), "b": (None,),
+    "b_q": (None,), "b_k": (None,), "b_v": (None,),
+    "dt_bias": (None,), "A_log": (None,), "D": (None,), "pos": (None,),
+}
+# MoE expert tables carry a leading E axis in front of the 2-D core.
+# Dense layout (small E): experts replicated in ID space, (d, f) sharded.
+_MOE_CORE = {
+    "w_gate": (None,) + _COL, "w_up": (None,) + _COL, "w_down": (None,) + _ROW,
+}
+# Expert-parallel layout (E divisible by the tp axis): experts sharded in ID
+# space over tp, FSDP on d; tokens all-to-all to their experts.
+_MOE_CORE_EP = {
+    "w_gate": ("tp", "fsdp", None), "w_up": ("tp", "fsdp", None),
+    "w_down": ("tp", None, "fsdp"),
+}
+
+# KV / state caches, by leaf name (leading L axis padded automatically)
+_CACHE_SPECS = {
+    "k": ("batch", "seq", "tp", None),       # (B, S, Hkv, hd)
+    "v": ("batch", "seq", "tp", None),
+    "ckv": ("batch", "seq", None),           # MLA latent (B, S, r)
+    "krope": ("batch", "seq", None),
+    "ssm": ("batch", "tp", None, None),      # (B, H, P, N)
+    "conv": ("batch", None, "tp"),           # (B, K-1, C)
+    "pos": (None,),
+}
+
+
+def _key_name(k) -> Optional[str]:
+    if isinstance(k, DictKey):
+        return str(k.key)
+    if isinstance(k, SequenceKey):
+        return None
+    return getattr(k, "name", None)
+
+
+def _resolve(logical: Optional[str], axes_map: dict) -> Any:
+    if logical is None:
+        return None
+    return axes_map.get(logical)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guarded_spec(dims: Tuple[int, ...], logical: Tuple, mesh,
+                  axes_map: dict) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim and
+    duplicate mesh axes (a spec may use each mesh axis at most once — the
+    first dim that can legally use an axis keeps it)."""
+    parts = []
+    used: set = set()
+    for size, name in zip(dims, logical):
+        axis = _resolve(name, axes_map)
+        members = (set(axis) if isinstance(axis, tuple)
+                   else {axis} if axis is not None else set())
+        if (axis is not None and size % _axis_size(mesh, axis) == 0
+                and not (members & used)):
+            parts.append(axis)
+            used |= members
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def default_axes_map(multi_pod: bool = False) -> dict:
+    """Logical -> mesh axes for the baseline layout."""
+    return {
+        "fsdp": "data",
+        "tp": "model",
+        "batch": ("pod", "data") if multi_pod else "data",
+        "seq": "model",
+        "learner": "pod",
+    }
+
+
+def param_spec_tree(params_shape, mesh, axes_map: dict,
+                    learner_axis: bool = False):
+    """PartitionSpec pytree for a (possibly learner-stacked) param tree.
+
+    ``params_shape``: pytree of ShapeDtypeStruct (or arrays).
+    ``learner_axis``: leaves carry a leading m axis -> sharded over
+    ``axes_map['learner']``.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        names = [n for n in (_key_name(k) for k in path) if n]
+        name = names[-1] if names else ""
+        in_moe = "moe" in names and "shared" not in names
+        if in_moe and name in _MOE_CORE:
+            # expert-parallel layout when the E axis divides the tp axis
+            e_dim = leaf.shape[-3]
+            tp_size = _axis_size(mesh, _resolve("tp", axes_map))
+            core = (_MOE_CORE_EP[name] if e_dim % tp_size == 0
+                    else _MOE_CORE[name])
+        else:
+            core = _CORE_SPECS.get(name)
+        if core is None:
+            core = (None,) * leaf.ndim
+        ndim = leaf.ndim
+        ncore = min(len(core), ndim)
+        lead = ndim - ncore
+        logical = [None] * lead + list(core[-ncore:] if ncore else [])
+        if learner_axis and lead >= 1:
+            logical[0] = "learner"
+        specs.append(_guarded_spec(leaf.shape, tuple(logical), mesh, axes_map))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_spec_tree(cache_shape, mesh, axes_map: dict):
+    """PartitionSpec pytree for a stacked (L-leading) decode cache."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat:
+        names = [n for n in (_key_name(k) for k in path) if n]
+        name = names[-1] if names else ""
+        core = _CACHE_SPECS.get(name, (None,) * leaf.ndim)
+        ndim = leaf.ndim
+        ncore = min(len(core), ndim)
+        lead = ndim - ncore
+        logical = [None] * lead + list(core[-ncore:] if ncore else [])
+        specs.append(_guarded_spec(leaf.shape, tuple(logical), mesh, axes_map))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec_tree(batch_shape, mesh, axes_map: dict,
+                    learner_axis: bool = False):
+    """Batch pytree: leading dim(s) over (learner,) batch axes."""
+    def spec(leaf):
+        logical: list = ["batch"] + [None] * (leaf.ndim - 1)
+        if learner_axis:
+            logical = ["learner"] + logical[:leaf.ndim - 1]
+        return _guarded_spec(leaf.shape, tuple(logical[:leaf.ndim]), mesh,
+                             axes_map)
+    return jax.tree.map(spec, batch_shape)
+
+
+def replicated(tree, mesh):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_rules(axes_map: dict) -> dict:
+    """Rules consumed by ``repro.pjit_utils.mesh_context`` for the logical
+    names used by ``constrain`` calls inside model code."""
+    return {
+        "batch": axes_map["batch"],
+        "heads": axes_map["tp"],
+        "kv_heads": axes_map["tp"],
+        "ffn": axes_map["tp"],
+        # expert parallelism: expert-ID axis over the tp axis when divisible
+        # (the guard in logical_to_spec drops it otherwise)
+        "expert": axes_map["tp"],
+        "vocab": axes_map["tp"],
+        "embed": axes_map["fsdp"],
+        # JIT weight-gather target: keep the tensor-parallel dim sharded,
+        # unshard the FSDP (contraction) dim right before each matmul.
+        "tp": axes_map["tp"],
+    }

@@ -1,0 +1,246 @@
+"""Programs + input specs for the dry-run and launchers.
+
+``build_program(cfg, shape, mesh, mode)`` returns a ``Program``: the step
+function, ShapeDtypeStruct stand-ins for every input (weak-type-correct, no
+device allocation), and in/out shardings — ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*args)``.
+
+Modes
+-----
+* ``train``          — baseline data-parallel train step (sigma_1-equivalent
+                       per Prop. 3); lowered by ``train_4k``.
+* ``train_dynamic``  — the paper's dynamic averaging protocol: m learners
+                       (one per pod), conditional weight-averaging collective.
+* ``train_periodic`` — sigma_b in the same learner layout (A/B reference).
+* ``prefill``        — full forward; lowered by ``prefill_32k``.
+* ``decode``         — one token against a seq_len-deep cache; lowered by
+                       ``decode_32k`` / ``long_500k``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (
+    ModelConfig, ProtocolConfig, ShapeConfig, TrainConfig,
+    MODALITY_AUDIO, MODALITY_VISION,
+)
+from repro.core.distributed import (
+    DynamicTrainState, make_dynamic_train_step, make_periodic_train_step,
+)
+from repro.launch import sharding as shd
+from repro.models.model import (
+    AUDIO_CODEBOOKS, init_lm_cache, init_lm_params, lm_loss,
+)
+from repro.pjit_utils import mesh_context
+from repro.serve.engine import make_decode_step, make_prefill
+from repro.train.step import TrainState, make_train_step
+
+VISION_PREFIX_TOKENS = 256
+
+
+@dataclass
+class Program:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: init_lm_params(cfg, k, _dtype(cfg)),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Training/prefill batch ShapeDtypeStructs for the arch's modality."""
+    i32 = jnp.int32
+    if cfg.modality == MODALITY_AUDIO:
+        return {"tokens": _sds((batch, seq, AUDIO_CODEBOOKS), i32),
+                "labels": _sds((batch, seq, AUDIO_CODEBOOKS), i32)}
+    if cfg.modality == MODALITY_VISION:
+        s_text = seq - VISION_PREFIX_TOKENS
+        return {"tokens": _sds((batch, s_text), i32),
+                "labels": _sds((batch, s_text), i32),
+                "prefix_embeds": _sds(
+                    (batch, VISION_PREFIX_TOKENS, cfg.d_model), _dtype(cfg))}
+    return {"tokens": _sds((batch, seq), i32),
+            "labels": _sds((batch, seq), i32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    if shape.kind == "decode":
+        tok = (_sds((shape.global_batch, AUDIO_CODEBOOKS), jnp.int32)
+               if cfg.modality == MODALITY_AUDIO
+               else _sds((shape.global_batch,), jnp.int32))
+        cache = jax.eval_shape(
+            lambda: init_lm_cache(cfg, shape.global_batch, shape.seq_len,
+                                  _dtype(cfg)))
+        return {"token": tok, "cache": cache,
+                "pos": _sds((), jnp.int32)}
+    b = batch_struct(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        b.pop("labels")
+    return b
+
+
+def _with_mesh(fn, mesh, rules):
+    @functools.wraps(fn)
+    def wrapped(*a):
+        with mesh_context(mesh, rules):
+            return fn(*a)
+    return wrapped
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# per-mode program builders
+# ---------------------------------------------------------------------------
+
+def build_program(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  mode: str = "auto",
+                  train: Optional[TrainConfig] = None,
+                  proto: Optional[ProtocolConfig] = None) -> Program:
+    multi_pod = "pod" in mesh.axis_names
+    axes = shd.default_axes_map(multi_pod)
+    rules = shd.activation_rules(axes)
+    train = train or TrainConfig(optimizer="sgd", remat=True)
+    proto = proto or ProtocolConfig(kind="dynamic", b=10, delta=1.0)
+
+    if mode == "auto":
+        mode = {"train": "train", "prefill": "prefill",
+                "decode": "decode"}[shape.kind]
+
+    p_struct = params_struct(cfg)
+    p_spec = shd.param_spec_tree(p_struct, mesh, axes)
+
+    if mode == "train":
+        loss_fn = lambda p, b: lm_loss(cfg, p, b, remat=train.remat)
+        init_state, step = make_train_step(loss_fn, train)
+        state = jax.eval_shape(init_state, p_struct)
+        state_spec = TrainState(
+            params=p_spec,
+            opt_state=jax.tree.map(lambda _: P(), state.opt_state),
+            step=P())
+        b_struct = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        b_spec = shd.batch_spec_tree(b_struct, mesh, axes)
+        return Program(
+            name=f"{cfg.name}:{shape.name}:train",
+            fn=_with_mesh(step, mesh, rules),
+            args=(state, b_struct),
+            in_shardings=(_named(state_spec, mesh), _named(b_spec, mesh)),
+            out_shardings=(_named(state_spec, mesh),
+                           _named({"loss": P()}, mesh)),
+            meta={"mode": "train", "multi_pod": multi_pod})
+
+    if mode in ("train_dynamic", "train_periodic"):
+        m = mesh.shape["pod"] if multi_pod else 2
+        if multi_pod:
+            # the pod axis is consumed by the learner dim; within a learner
+            # the batch shards over data only.
+            axes = dict(axes, batch="data")
+        else:
+            # single-pod: learners = halves of the data axis is not modeled;
+            # the learner axis is simply unsharded (m small).
+            axes = dict(axes, learner=None)
+        loss_fn = lambda p, b: lm_loss(cfg, p, b, remat=train.remat)
+        mk = (make_dynamic_train_step if mode == "train_dynamic"
+              else make_periodic_train_step)
+        # §Perf: propagate per-learner sharding constraints through the vmap
+        # (spmd_axis_name) so the within-learner layout matches the baseline
+        step = mk(loss_fn, proto, train, m,
+                  spmd_axis_name="pod" if multi_pod else None)
+        if multi_pod:
+            step = _with_mesh(step, mesh, shd.activation_rules(axes))
+        stacked = jax.tree.map(
+            lambda l: _sds((m,) + l.shape, l.dtype), p_struct)
+        from repro.optim import make_optimizer
+        opt_state = jax.eval_shape(
+            lambda p: jax.vmap(make_optimizer(train).init)(p), stacked)
+        z = _sds((), jnp.int32)
+        state = DynamicTrainState(stacked, opt_state, p_struct, z, z, z)
+        sp_stacked = shd.param_spec_tree(stacked, mesh, axes,
+                                         learner_axis=True)
+        sp_opt = jax.tree.map(lambda _: P(), opt_state)
+        state_spec = DynamicTrainState(
+            sp_stacked, sp_opt, p_spec, P(), P(), P())
+        per = shape.global_batch // m
+        b_struct = jax.tree.map(
+            lambda l: _sds((m, per) + l.shape[1:], l.dtype),
+            batch_struct(cfg, shape.global_batch, shape.seq_len))
+        b_spec = shd.batch_spec_tree(b_struct, mesh, axes, learner_axis=True)
+        out_metrics = {"loss": P(), "synced": P()}
+        if mode == "train_dynamic":
+            out_metrics.update({"loss_per_learner": P(), "max_sq_dist": P()})
+        return Program(
+            name=f"{cfg.name}:{shape.name}:{mode}",
+            fn=step,   # no mesh_context: constraints inside vmap are skipped
+            args=(state, b_struct),
+            in_shardings=(_named(state_spec, mesh), _named(b_spec, mesh)),
+            out_shardings=(_named(state_spec, mesh),
+                           _named(out_metrics, mesh)),
+            meta={"mode": mode, "m": m, "multi_pod": multi_pod})
+
+    if mode == "prefill":
+        fn = make_prefill(cfg)
+        b_struct = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        b_struct.pop("labels")
+        tok = b_struct["tokens"]
+        b_spec = shd.batch_spec_tree(b_struct, mesh, axes)
+        if cfg.modality == MODALITY_VISION:
+            from repro.models.model import lm_apply
+            fn = lambda p, t, pe: lm_apply(cfg, p, t, prefix_embeds=pe)[0]
+            args = (p_struct, tok, b_struct["prefix_embeds"])
+            in_sh = (_named(p_spec, mesh), _named(b_spec["tokens"], mesh),
+                     _named(b_spec["prefix_embeds"], mesh))
+        else:
+            args = (p_struct, tok)
+            in_sh = (_named(p_spec, mesh), _named(b_spec["tokens"], mesh))
+        out_sh = _named(P(axes["batch"], None, None), mesh)
+        return Program(
+            name=f"{cfg.name}:{shape.name}:prefill",
+            fn=_with_mesh(fn, mesh, rules),
+            args=args, in_shardings=in_sh, out_shardings=out_sh,
+            meta={"mode": "prefill", "multi_pod": multi_pod})
+
+    if mode == "decode":
+        spec_in = input_specs(cfg, shape)
+        step = make_decode_step(cfg)
+        cache_spec = shd.cache_spec_tree(spec_in["cache"], mesh, axes)
+        tok_spec = shd.batch_spec_tree(spec_in["token"], mesh, axes)
+        fn = lambda p, c, t, pos: step(p, c, t, pos)
+        # §Perf: decode moves a handful of tokens — leave weights sharded
+        # (no JIT weight-gather) and let the tiny activations all-reduce
+        rules = dict(rules, _gather_weights=False)
+        return Program(
+            name=f"{cfg.name}:{shape.name}:decode",
+            fn=_with_mesh(fn, mesh, rules),
+            args=(p_struct, spec_in["cache"], spec_in["token"],
+                  spec_in["pos"]),
+            in_shardings=(_named(p_spec, mesh), _named(cache_spec, mesh),
+                          _named(tok_spec, mesh), NamedSharding(mesh, P())),
+            out_shardings=None,
+            meta={"mode": "decode", "multi_pod": multi_pod})
+
+    raise ValueError(mode)

@@ -1,0 +1,2 @@
+from repro.models.model import init_lm_params, lm_apply, lm_loss, init_lm_cache  # noqa: F401
+from repro.models.cnn import init_cnn_params, cnn_apply  # noqa: F401

@@ -1,0 +1,306 @@
+"""Attention variants: GQA (opt. QKV bias), sliding-window, and MLA.
+
+Supports three execution modes:
+  * ``forward``  — full-sequence causal attention (training / prefill)
+  * ``decode``   — single new token against a KV cache
+MLA (DeepSeek-V2) caches the compressed latent + shared rope key and uses
+the absorbed formulation for decode (scores against the latent directly),
+which is what makes its KV cache ~9x smaller.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ATTN_SLIDING
+from repro.models.layers import dense_init, apply_rope
+from repro.pjit_utils import constrain, gather_weight
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key, dtype=jnp.float32, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 6)
+        p = {
+            "w_dkv": dense_init(ks[0], d, m.kv_lora_rank, dtype),
+            "w_krope": dense_init(ks[1], d, m.rope_head_dim, dtype),
+            "w_uk": dense_init(ks[2], m.kv_lora_rank, H * hd, dtype),
+            "w_uv": dense_init(ks[3], m.kv_lora_rank, H * hd, dtype),
+            "w_o": dense_init(ks[5], H * hd, d, dtype),
+        }
+        if m.q_lora_rank:
+            kq = jax.random.split(ks[4])
+            p["w_dq"] = dense_init(kq[0], d, m.q_lora_rank, dtype)
+            p["w_uq"] = dense_init(kq[1], m.q_lora_rank, H * (hd + m.rope_head_dim), dtype)
+        else:
+            p["w_q"] = dense_init(ks[4], d, H * (hd + m.rope_head_dim), dtype)
+        return p
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], d, H * hd, dtype),
+        "w_k": dense_init(ks[1], d, Hkv * hd, dtype),
+        "w_v": dense_init(ks[2], d, Hkv * hd, dtype),
+        "w_o": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((H * hd,), dtype)
+        p["b_k"] = jnp.zeros((Hkv * hd,), dtype)
+        p["b_v"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# masking
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos, k_pos, window: int = 0):
+    """(..., Sq, Sk) boolean mask. window>0 -> sliding window."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m = m & (k_pos[..., None, :] > q_pos[..., :, None] - window)
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,S,Hkv,G,d) k,v: (B,T,Hkv,d). mask: (B,S,T) or (S,T)."""
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA forward / decode
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, params, x):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    # JIT weight-gather (FSDP): unshard d_in before the matmul
+    w_q = gather_weight(params["w_q"], (None, "tp"))
+    w_k = gather_weight(params["w_k"], (None, "tp"))
+    w_v = gather_weight(params["w_v"], (None, "tp"))
+    q = jnp.einsum("bsd,de->bse", x, w_q)
+    k = jnp.einsum("bsd,de->bse", x, w_k)
+    v = jnp.einsum("bsd,de->bse", x, w_v)
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, Hkv, hd), v.reshape(B, S, Hkv, hd))
+
+
+def _banded_sdpa(q, k, v, window: int, scale):
+    """Block-banded sliding-window attention (TPU-native SWA blocking).
+
+    q: (B,S,Hkv,G,d), k/v: (B,S,Hkv,d), S % window == 0. Each query block of
+    ``window`` tokens attends only to its own and the previous key block
+    (which together cover every in-window key), so scores are
+    (B, H, nb, w, 2w) instead of (B, H, S, S): compute and intermediate
+    memory drop by a factor S / (2 * window).
+    """
+    B, S, Hkv, G, d = q.shape
+    w = window
+    nb = S // w
+    qb = q.reshape(B, nb, w, Hkv, G, d)
+    kb = k.reshape(B, nb, w, Hkv, d)
+    vb = v.reshape(B, nb, w, Hkv, d)
+    zeros = jnp.zeros_like(kb[:, :1])
+    k_prev = jnp.concatenate([zeros, kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)          # (B,nb,2w,Hkv,d)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    scores = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qb, k2).astype(
+        jnp.float32) * scale                            # (B,nb,Hkv,G,w,2w)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 0)        # in-block
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 1) - w
+    first = (jnp.arange(nb) == 0)[:, None, None]
+    mask = (kpos <= qpos) & (kpos > qpos - w)
+    mask = mask[None] & ~(first & (kpos[None] < 0))     # block 0 has no prev
+    # mask: (nb, w, 2w) -> broadcast over (B, nb, Hkv, G, w, 2w)
+    scores = jnp.where(mask[None, :, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", probs, v2)
+    return out.reshape(B, S, Hkv, G, d)
+
+
+def gqa_forward(cfg: ModelConfig, params, x, positions):
+    """Full-sequence causal attention. x: (B,S,D), positions: (B,S) or (S,)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    G = H // Hkv
+    q, k, v = _project_qkv(cfg, params, x)
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (B, S))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    window = cfg.sliding_window if cfg.attn_type == ATTN_SLIDING else 0
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    # §Perf: block-banded path for long sliding-window prefill — avoids the
+    # full (S, S) score materialization when the window covers < half of S.
+    # Requires the default contiguous positions (0..S-1).
+    if (window > 0 and S % window == 0 and S >= 2 * window
+            and positions.shape[-1] == S):
+        out = _banded_sdpa(q.reshape(B, S, Hkv, G, hd), k, v, window, scale)
+    else:
+        mask = causal_mask(positions, positions, window)
+        out = _sdpa(q.reshape(B, S, Hkv, G, hd), k, v, mask, scale)
+    out = out.reshape(B, S, H * hd)
+    w_o = gather_weight(params["w_o"], ("tp", None))
+    return jnp.einsum("bse,ed->bsd", out, w_o)
+
+
+def gqa_decode(cfg: ModelConfig, params, x, cache, pos):
+    """One-token decode. x: (B,1,D); cache: {"k","v"}: (B, Smax, Hkv, hd),
+    plus {"pos": (Smax,) int32} ring-buffer position tags for sliding window;
+    pos: scalar int32 — number of tokens already in the cache.
+
+    Sliding-window archs use a ring buffer of size ``window`` (rope applied
+    at write time with absolute positions), so a 524k-token decode carries a
+    bounded cache.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    G = H // Hkv
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    posb = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+    Smax = cache["k"].shape[1]
+    sliding = cfg.attn_type == ATTN_SLIDING
+    slot = jnp.asarray(pos) % Smax if sliding else jnp.asarray(pos)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if sliding:
+        tags = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.asarray(pos, jnp.int32)[None], (slot,))
+        valid = (tags >= 0) & (tags <= pos) & (tags > pos - cfg.sliding_window)
+        valid = valid[None, :]
+        new_cache = {"k": k, "v": v, "pos": tags}
+    else:
+        k_pos = jnp.arange(Smax, dtype=jnp.int32)
+        valid = k_pos[None, :] <= pos
+        new_cache = {"k": k, "v": v}
+    mask = jnp.broadcast_to(valid[:, None, :], (B, 1, Smax))
+    out = _sdpa(q.reshape(B, 1, Hkv, G, hd), k, v, mask, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd)
+    w_o = gather_weight(params["w_o"], ("tp", None))
+    y = jnp.einsum("bse,ed->bsd", out, w_o)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA forward / decode
+# ---------------------------------------------------------------------------
+
+def _mla_queries(cfg, params, x, positions):
+    B, S, _ = x.shape
+    m = cfg.mla
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    if m.q_lora_rank:
+        q = jnp.einsum("bsd,dr->bsr", x, gather_weight(params["w_dq"], (None, "tp")))
+        q = jnp.einsum("bsr,re->bse", q, gather_weight(params["w_uq"], (None, "tp")))
+    else:
+        q = jnp.einsum("bsd,de->bse", x, gather_weight(params["w_q"], (None, "tp")))
+    q = q.reshape(B, S, H, hd + m.rope_head_dim)
+    q_c, q_r = q[..., :hd], q[..., hd:]
+    q_r = apply_rope(q_r, positions, cfg.rope_theta)
+    return q_c, q_r
+
+
+def mla_forward(cfg: ModelConfig, params, x, positions):
+    B, S, _ = x.shape
+    m = cfg.mla
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (B, S))
+    q_c, q_r = _mla_queries(cfg, params, x, positions)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, gather_weight(params["w_dkv"], (None, "tp")))
+    k_r = jnp.einsum("bsd,dr->bsr", x, gather_weight(params["w_krope"], (None, None)))[:, :, None, :]
+    k_r = apply_rope(k_r, positions, cfg.rope_theta)              # (B,S,1,rh)
+    k_c = jnp.einsum("bsr,re->bse", c_kv, gather_weight(params["w_uk"], (None, "tp"))).reshape(B, S, H, hd)
+    v = jnp.einsum("bsr,re->bse", c_kv, gather_weight(params["w_uv"], (None, "tp"))).reshape(B, S, H, hd)
+    scale = 1.0 / jnp.sqrt(hd + m.rope_head_dim).astype(jnp.float32)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_c, k_c)
+              + jnp.einsum("bshd,btgd->bhst", q_r, jnp.broadcast_to(k_r, (B, S, 1, m.rope_head_dim))))
+    scores = scores.astype(jnp.float32) * scale
+    mask = causal_mask(positions, positions)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, H * hd)
+    return jnp.einsum("bse,ed->bsd", out, gather_weight(params["w_o"], ("tp", None)))
+
+
+def mla_decode(cfg: ModelConfig, params, x, cache, pos):
+    """Absorbed MLA decode. cache: {"ckv": (B,Smax,r), "krope": (B,Smax,rh)}."""
+    B = x.shape[0]
+    m = cfg.mla
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    posb = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_c, q_r = _mla_queries(cfg, params, x, posb)                 # (B,1,H,·)
+    c_new = jnp.einsum("bsd,dr->bsr", x, gather_weight(params["w_dkv"], (None, "tp")))
+    kr_new = jnp.einsum("bsd,dr->bsr", x, gather_weight(params["w_krope"], (None, None)))[:, :, None, :]
+    kr_new = apply_rope(kr_new, posb, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], kr_new.astype(cache["krope"].dtype), (0, pos, 0))
+    # absorb W_uk into the query: q_abs (B,H,r)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, hd)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_c, w_uk)[:, 0]          # (B,H,r)
+    scale = 1.0 / jnp.sqrt(hd + m.rope_head_dim).astype(jnp.float32)
+    scores = (jnp.einsum("bhr,btr->bht", q_abs, ckv)
+              + jnp.einsum("bshr,btr->bht", q_r, krope))           # q_r: (B,1,H,rh)
+    scores = scores.astype(jnp.float32) * scale
+    Smax = ckv.shape[1]
+    valid = jnp.arange(Smax, dtype=jnp.int32)[None, :] <= pos
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    ctx = jnp.einsum("bht,btr->bhr", probs, ckv)                   # latent context
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, hd)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(B, 1, H * hd)
+    y = jnp.einsum("bse,ed->bsd", out, gather_weight(params["w_o"], ("tp", None)))
+    return y, {"ckv": ckv, "krope": krope}
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_seq, m.rope_head_dim), dtype),
+        }
+    if cfg.attn_type == ATTN_SLIDING:
+        max_seq = min(max_seq, cfg.sliding_window)
+        return {
+            "k": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
+            "pos": jnp.full((max_seq,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
+    }

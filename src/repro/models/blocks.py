@@ -1,0 +1,119 @@
+"""Decoder block: mixer (attention / SSM / hybrid-parallel) + FFN (dense / MoE).
+
+One block's params are a dict; the full model stacks L copies on a leading
+axis and runs ``lax.scan`` over them (small HLO, fast compiles even at 126
+layers).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, BLOCK_ATTN, BLOCK_SSM, BLOCK_HYBRID
+from repro.models import attention as attn
+from repro.models import mamba
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    rmsnorm_init, rmsnorm_apply, swiglu_init, swiglu_apply,
+)
+from repro.pjit_utils import constrain
+
+
+def block_init(cfg: ModelConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    p = {"norm_mix": rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.block_type in (BLOCK_ATTN, BLOCK_HYBRID):
+        p["attn"] = attn.attn_init(cfg, ks[0], dtype)
+    if cfg.block_type in (BLOCK_SSM, BLOCK_HYBRID):
+        p["ssm"] = mamba.mamba_init(cfg, ks[1], dtype)
+    if cfg.block_type == BLOCK_HYBRID:
+        # Hymba-style parallel heads: per-branch output norms before fusion
+        p["norm_attn_out"] = rmsnorm_init(cfg.d_model, dtype)
+        p["norm_ssm_out"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.d_ff or cfg.is_moe:
+        p["norm_ffn"] = rmsnorm_init(cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["moe"] = moe_mod.moe_init(cfg, ks[2], dtype)
+        else:
+            p["ffn"] = swiglu_init(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _mixer_forward(cfg: ModelConfig, p, h, positions):
+    if cfg.block_type == BLOCK_ATTN:
+        if cfg.mla is not None:
+            return attn.mla_forward(cfg, p["attn"], h, positions)
+        return attn.gqa_forward(cfg, p["attn"], h, positions)
+    if cfg.block_type == BLOCK_SSM:
+        return mamba.mamba_forward(cfg, p["ssm"], h)
+    # hybrid: parallel attention + SSM heads, normalized and averaged (Hymba)
+    a = attn.gqa_forward(cfg, p["attn"], h, positions)
+    s = mamba.mamba_forward(cfg, p["ssm"], h)
+    a = rmsnorm_apply(p["norm_attn_out"], a, cfg.norm_eps)
+    s = rmsnorm_apply(p["norm_ssm_out"], s, cfg.norm_eps)
+    return 0.5 * (a + s)
+
+
+def block_forward(cfg: ModelConfig, p, x, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> (x', aux_loss)."""
+    h = rmsnorm_apply(p["norm_mix"], x, cfg.norm_eps)
+    x = x + _mixer_forward(cfg, p, h, positions)
+    aux = jnp.zeros((), jnp.float32)
+    if "norm_ffn" in p:
+        h = rmsnorm_apply(p["norm_ffn"], x, cfg.norm_eps)
+        h = constrain(h, ("batch", None, None))
+        if cfg.is_moe:
+            f, aux = moe_mod.moe_apply(cfg, p["moe"], h)
+        else:
+            f = swiglu_apply(p["ffn"], h)
+        x = x + f
+    x = constrain(x, ("batch", None, None))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def block_cache_init(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
+    c = {}
+    if cfg.block_type in (BLOCK_ATTN, BLOCK_HYBRID):
+        c["attn"] = attn.attn_cache_init(cfg, batch, max_seq, dtype)
+    if cfg.block_type in (BLOCK_SSM, BLOCK_HYBRID):
+        c["ssm"] = mamba.mamba_cache_init(cfg, batch, dtype)
+    return c
+
+
+def _mixer_decode(cfg: ModelConfig, p, h, cache, pos):
+    new_cache = {}
+    if cfg.block_type == BLOCK_ATTN:
+        if cfg.mla is not None:
+            y, new_cache["attn"] = attn.mla_decode(cfg, p["attn"], h, cache["attn"], pos)
+        else:
+            y, new_cache["attn"] = attn.gqa_decode(cfg, p["attn"], h, cache["attn"], pos)
+        return y, new_cache
+    if cfg.block_type == BLOCK_SSM:
+        y, new_cache["ssm"] = mamba.mamba_decode(cfg, p["ssm"], h, cache["ssm"])
+        return y, new_cache
+    a, new_cache["attn"] = attn.gqa_decode(cfg, p["attn"], h, cache["attn"], pos)
+    s, new_cache["ssm"] = mamba.mamba_decode(cfg, p["ssm"], h, cache["ssm"])
+    a = rmsnorm_apply(p["norm_attn_out"], a, cfg.norm_eps)
+    s = rmsnorm_apply(p["norm_ssm_out"], s, cfg.norm_eps)
+    return 0.5 * (a + s), new_cache
+
+
+def block_decode(cfg: ModelConfig, p, x, cache, pos):
+    """x: (B,1,D) -> (x', new_cache)."""
+    h = rmsnorm_apply(p["norm_mix"], x, cfg.norm_eps)
+    y, new_cache = _mixer_decode(cfg, p, h, cache, pos)
+    x = x + y
+    if "norm_ffn" in p:
+        h = rmsnorm_apply(p["norm_ffn"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            f, _ = moe_mod.moe_apply(cfg, p["moe"], h)
+        else:
+            f = swiglu_apply(p["ffn"], h)
+        x = x + f
+    return x, new_cache

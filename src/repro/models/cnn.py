@@ -1,0 +1,132 @@
+"""The paper's own model families, in pure JAX.
+
+* MNIST CNN (Appendix A.1, Table 1): Conv32-Conv64-MaxPool-Dense128-Dense10.
+* Deep-driving CNN (Appendix A.4, Table 5; Bojarski et al. PilotNet):
+  5 conv layers + 4 dense layers -> steering angle.
+* MLP for the random-graphical-model concept-drift task (Appendix A.3).
+
+A ``cnn_spec`` is a tuple of layer descriptors:
+  ("conv", out_ch, k, stride)   valid-padded conv + ReLU
+  ("pool", k)                   max pool k x k
+  ("flatten",)
+  ("dense", n)                  dense + ReLU (last dense is linear)
+  ("dropout", rate)             inverted dropout (active only given an rng)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def _conv_init(key, k: int, c_in: int, c_out: int, dtype):
+    lim = math.sqrt(6.0 / (k * k * c_in + c_out))
+    w = jax.random.uniform(key, (k, k, c_in, c_out), dtype, -lim, lim)
+    return {"w": w, "b": jnp.zeros((c_out,), dtype)}
+
+
+def _shape_after(spec, input_shape):
+    h, w, c = input_shape
+    flat = None
+    for layer in spec:
+        if layer[0] == "conv":
+            _, c_out, k, s = layer
+            h = (h - k) // s + 1
+            w = (w - k) // s + 1
+            c = c_out
+        elif layer[0] == "pool":
+            k = layer[1]
+            h, w = h // k, w // k
+        elif layer[0] == "flatten":
+            if c:
+                flat = h * w * c
+        elif layer[0] == "dense":
+            flat = layer[1]
+    return flat
+
+
+def init_cnn_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    spec = cfg.cnn_spec
+    if len(cfg.input_shape) == 1:           # dense-only model (drift MLP)
+        h = w = c = 0
+        flat = cfg.input_shape[0]
+    else:
+        h, w, c = cfg.input_shape
+        flat = None
+    params = []
+    for layer in spec:
+        if layer[0] == "conv":
+            _, c_out, k, s = layer
+            key, sub = jax.random.split(key)
+            params.append(_conv_init(sub, k, c, c_out, dtype))
+            h = (h - k) // s + 1
+            w = (w - k) // s + 1
+            c = c_out
+        elif layer[0] == "pool":
+            params.append({})
+            h, w = h // layer[1], w // layer[1]
+        elif layer[0] == "flatten":
+            params.append({})
+            if c:                       # image input; 1-D inputs keep flat
+                flat = h * w * c
+        elif layer[0] == "dense":
+            key, sub = jax.random.split(key)
+            params.append({"w": dense_init(sub, flat, layer[1], dtype),
+                           "b": jnp.zeros((layer[1],), dtype)})
+            flat = layer[1]
+        elif layer[0] == "dropout":
+            params.append({})
+        else:
+            raise ValueError(layer)
+    return {"layers": params}
+
+
+def cnn_apply(cfg: ModelConfig, params, x, *, rng: Optional[jax.Array] = None):
+    """x: (B, H, W, C) [or (B, d_in) for pure-dense specs] -> (B, num_outputs)."""
+    spec = cfg.cnn_spec
+    n_dense = sum(1 for l in spec if l[0] == "dense")
+    seen_dense = 0
+    for layer, p in zip(spec, params["layers"]):
+        if layer[0] == "conv":
+            _, c_out, k, s = layer
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(s, s), padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + p["b"])
+        elif layer[0] == "pool":
+            k = layer[1]
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+        elif layer[0] == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif layer[0] == "dense":
+            seen_dense += 1
+            x = x @ p["w"] + p["b"]
+            if seen_dense < n_dense:
+                x = jax.nn.relu(x)
+        elif layer[0] == "dropout":
+            if rng is not None:
+                rate = layer[1]
+                rng, sub = jax.random.split(rng)
+                keepmask = jax.random.bernoulli(sub, 1.0 - rate, x.shape)
+                x = jnp.where(keepmask, x / (1.0 - rate), 0.0)
+    return x
+
+
+def cnn_loss(cfg: ModelConfig, params, batch, *, rng=None):
+    """Cross-entropy for classifiers, MSE for regression (num_outputs==1)."""
+    out = cnn_apply(cfg, params, batch["x"], rng=rng)
+    if cfg.num_outputs == 1:
+        return jnp.mean(jnp.square(out[:, 0] - batch["y"]))
+    lp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, batch["y"][:, None], axis=-1))
+
+
+def cnn_accuracy(cfg: ModelConfig, params, batch):
+    out = cnn_apply(cfg, params, batch["x"])
+    return jnp.mean((jnp.argmax(out, axis=-1) == batch["y"]).astype(jnp.float32))

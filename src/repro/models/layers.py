@@ -1,0 +1,152 @@
+"""Shared neural-net primitives (pure JAX, functional, no flax).
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Initializers take
+an explicit PRNG key. All ``*_apply`` functions are pure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.pjit_utils import constrain, gather_weight
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float = 1.0):
+    """Glorot/Xavier-uniform init (the paper uses Glorot, ref. [41])."""
+    lim = scale * math.sqrt(6.0 / (d_in + d_out))
+    return jax.random.uniform(key, (d_in, d_out), dtype, -lim, lim)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, d). positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu_apply(params, x):
+    # JIT weight-gather (FSDP): unshard the contraction dim of each weight
+    # right before use — gathering the (small) weight instead of letting the
+    # partitioner all-gather the (huge) batch activations.
+    w_gate = gather_weight(params["w_gate"], (None, "tp"))
+    w_up = gather_weight(params["w_up"], (None, "tp"))
+    w_down = gather_weight(params["w_down"], ("tp", None))
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("batch", None, "ffn"))
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp_init(key, dims, dtype=jnp.float32, bias=True):
+    """Plain MLP: dims = (d0, d1, ..., dn)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        w = dense_init(k, a, b, dtype)
+        layers.append({"w": w, "b": jnp.zeros((b,), dtype)} if bias else {"w": w})
+    return {"layers": layers}
+
+
+def mlp_apply(params, x, activation=jax.nn.relu, final_activation=None):
+    layers = params["layers"]
+    for i, lyr in enumerate(layers):
+        x = x @ lyr["w"]
+        if "b" in lyr:
+            x = x + lyr["b"]
+        if i < len(layers) - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d (Mamba) helpers
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # frame into windows: out[:, t] = sum_k xp[:, t+k] * w[k]
+    def body(k, acc):
+        return acc + xp[:, k:k + x.shape[1], :] * w[k]
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is tiny (4); unrolled python loop keeps HLO simple
+        out = out + xp[:, k:k + x.shape[1], :] * w[k]
+    return out
+
+
+def causal_conv1d_update(conv_state, x_t, w):
+    """One decode step. conv_state: (B, K-1, C), x_t: (B, C) -> (y_t, new_state)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return y, window[:, 1:, :]

@@ -1,0 +1,210 @@
+"""Mamba2 block via SSD (state-space duality), Dao & Gu 2024 [arXiv:2405.21060].
+
+Forward uses the chunked SSD algorithm: within each chunk a quadratic
+attention-like term (MXU friendly), across chunks a linear recurrence on the
+(H, P, N) state carried by ``lax.scan``. Decode is the classic selective
+state-space recurrence with O(1) state — this is what makes ``long_500k``
+tractable for SSM/hybrid architectures.
+
+Shapes: x (B,S,D); d_inner = expand*D; H = d_inner/head_dim heads of dim P;
+B/C projections have G groups of state size N broadcast over heads.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (
+    dense_init, rmsnorm_init, rmsnorm_apply, causal_conv1d, causal_conv1d_update,
+)
+from repro.pjit_utils import constrain, gather_weight
+
+
+def mamba_dims(cfg: ModelConfig, d_model=None):
+    s = cfg.ssm
+    d = d_model or cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    return d, d_inner, H, s.head_dim, s.ngroups, s.d_state
+
+
+def mamba_init(cfg: ModelConfig, key, dtype=jnp.float32, d_model=None):
+    s = cfg.ssm
+    d, d_inner, H, P, G, N = mamba_dims(cfg, d_model)
+    conv_ch = d_inner + 2 * G * N
+    ks = jax.random.split(key, 6)
+    return {
+        "w_xz": dense_init(ks[0], d, 2 * d_inner, dtype),
+        "w_bc": dense_init(ks[1], d, 2 * G * N, dtype),
+        "w_dt": dense_init(ks[2], d, H, dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "conv_w": jax.random.normal(ks[3], (s.d_conv, conv_ch), dtype) * 0.1,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "w_out": dense_init(ks[4], d_inner, d, dtype),
+    }
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} x[..., k] (lower-tri)."""
+    S = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, A, B_, C_, chunk: int):
+    """Chunked SSD.
+
+    xh: (B,S,H,P) gated input; dt: (B,S,H) positive step sizes;
+    A: (H,) negative decay rates; B_/C_: (B,S,G,N).
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bb, S, H, P = xh.shape
+    G = B_.shape[2]
+    N = B_.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    # reshape into chunks
+    xc = xh.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = B_.reshape(Bb, nc, chunk, G, N)
+    Cc = C_.reshape(Bb, nc, chunk, G, N)
+
+    dA = dtc * A                                                   # (B,nc,cs,H) <= 0
+    dA_cum = jnp.cumsum(dA, axis=2)                                # within-chunk cumsum
+
+    # intra-chunk (quadratic, attention-like):
+    L = jnp.exp(_segsum(jnp.swapaxes(dA, 2, 3)))                   # (B,nc,H,cs,cs)
+    CB = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc)                  # (B,nc,G,cs,cs)
+    CB = jnp.repeat(CB, rep, axis=2)                               # (B,nc,H,cs,cs)
+    M = CB * L
+    y_diag = jnp.einsum("bchij,bcjhp,bcjh->bcihp", M, xc, dtc)
+
+    # chunk states: contribution of each chunk to the recurrent state
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)          # (B,nc,cs,H)
+    Brep = jnp.repeat(Bc, rep, axis=3)                             # (B,nc,cs,H,N)
+    states = jnp.einsum("bcihn,bcih,bcih,bcihp->bchpn",
+                        Brep, decay_states, dtc, xc)
+
+    # inter-chunk recurrence: h_{c} = exp(sum dA_c) h_{c-1} + states_{c-1}
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                     # (B,nc,H)
+
+    def scan_fn(h, inp):
+        dec, st = inp                                              # dec (B,H), st (B,H,P,N)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    init = jnp.zeros((Bb, states.shape[2], P, N), states.dtype)
+    final, h_prev = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                            # (B,nc,H,P,N)
+
+    # inter-chunk output: decay from chunk start
+    state_decay = jnp.exp(dA_cum)                                  # (B,nc,cs,H)
+    Crep = jnp.repeat(Cc, rep, axis=3)                             # (B,nc,cs,H,N)
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", Crep, h_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y, final
+
+
+def mamba_forward(cfg: ModelConfig, params, x, return_state: bool = False):
+    """Full-sequence forward. x: (B,S,D) -> (B,S,D)."""
+    s = cfg.ssm
+    d, d_inner, H, P, G, N = mamba_dims(cfg, x.shape[-1])
+    Bb, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, gather_weight(params["w_xz"], (None, "tp")))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("bsd,de->bse", x, gather_weight(params["w_bc"], (None, "tp")))
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, gather_weight(params["w_dt"], (None, "tp")))
+                         + params["dt_bias"])
+
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out = jax.nn.silu(causal_conv1d(conv_in, params["conv_w"]))
+    xs = conv_out[..., :d_inner].reshape(Bb, S, H, P)
+    bc = conv_out[..., d_inner:]
+    B_ = bc[..., :G * N].reshape(Bb, S, G, N)
+    C_ = bc[..., G * N:].reshape(Bb, S, G, N)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    pad = (-S) % s.chunk_size
+    if pad:   # pad to a chunk multiple; dt=0 on pads -> state untouched
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # (B, S, H)
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, final_state = _ssd_chunked(
+        xs.astype(jnp.float32), jnp.where(
+            (jnp.arange(xs.shape[1]) < S)[None, :, None],
+            dt.astype(jnp.float32), 0.0), A,
+        B_.astype(jnp.float32), C_.astype(jnp.float32), s.chunk_size)
+    if pad:
+        y = y[:, :S]
+        xs = xs[:, :S]
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bb, S, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, gather_weight(params["w_out"], ("tp", None)))
+    if return_state:
+        return out, final_state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent step)
+# ---------------------------------------------------------------------------
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32, d_model=None):
+    s = cfg.ssm
+    d, d_inner, H, P, G, N = mamba_dims(cfg, d_model)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, params, x, cache):
+    """One-token step. x: (B,1,D) -> (y, new_cache). O(1) in sequence length."""
+    s = cfg.ssm
+    d, d_inner, H, P, G, N = mamba_dims(cfg, x.shape[-1])
+    Bb = x.shape[0]
+    xt = x[:, 0, :]
+    xz = xt @ params["w_xz"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    bc = xt @ params["w_bc"]
+    dt = jax.nn.softplus(xt @ params["w_dt"] + params["dt_bias"])   # (B,H)
+
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out, new_conv = causal_conv1d_update(cache["conv"], conv_in, params["conv_w"])
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :d_inner].reshape(Bb, H, P)
+    bcv = conv_out[..., d_inner:]
+    B_ = bcv[..., :G * N].reshape(Bb, G, N)
+    C_ = bcv[..., G * N:].reshape(Bb, G, N)
+    rep = H // G
+    B_ = jnp.repeat(B_, rep, axis=1)                                # (B,H,N)
+    C_ = jnp.repeat(C_, rep, axis=1)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))               # (H,)
+    dA = jnp.exp(dt.astype(jnp.float32) * A)                        # (B,H)
+    h = cache["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt.astype(jnp.float32), B_.astype(jnp.float32),
+        xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", C_.astype(jnp.float32), h)
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bb, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ params["w_out"])[:, None, :]
+    return out, {"ssm": h, "conv": new_conv}

@@ -1,0 +1,189 @@
+"""Decoder-only LM: embeddings -> scan over stacked blocks -> head.
+
+Handles the three modalities of the assigned pool:
+  * text  — tokens (B, S) int32
+  * vision (VLM backbone) — stub patch embeddings (B, S_img, D) concatenated
+    in front of text-token embeddings (the ViT + projector is the allowed
+    frontend stub); loss is masked to text positions
+  * audio (MusicGen backbone) — K codebook token streams (B, S, K); the
+    embedding is the sum over codebooks, the head predicts K vocabularies
+
+All layers are stacked on a leading L axis and executed with ``lax.scan``
+(optionally rematerialized), keeping HLO size independent of depth.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MODALITY_AUDIO, MODALITY_VISION
+from repro.models import blocks as blk
+from repro.models.layers import embed_init, dense_init, rmsnorm_init, rmsnorm_apply
+from repro.pjit_utils import constrain, gather_weight
+
+AUDIO_CODEBOOKS = 4
+
+
+def init_lm_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    k_e, k_b, k_h = jax.random.split(key, 3)
+    if cfg.modality == MODALITY_AUDIO:
+        embed = jax.vmap(lambda k: embed_init(k, cfg.vocab_size, cfg.d_model, dtype))(
+            jax.random.split(k_e, AUDIO_CODEBOOKS))          # (K, V, D)
+    else:
+        embed = embed_init(k_e, cfg.vocab_size, cfg.d_model, dtype)
+    block_keys = jax.random.split(k_b, cfg.num_layers)
+    stacked = jax.vmap(lambda k: blk.block_init(cfg, k, dtype))(block_keys)
+    p = {
+        "embed": embed,
+        "blocks": stacked,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        out_dim = (cfg.vocab_size * AUDIO_CODEBOOKS
+                   if cfg.modality == MODALITY_AUDIO else cfg.vocab_size)
+        p["lm_head"] = dense_init(k_h, cfg.d_model, out_dim, dtype)
+    return p
+
+
+def _embed_tokens(cfg: ModelConfig, params, tokens):
+    if cfg.modality == MODALITY_AUDIO:
+        # tokens: (B, S, K); params["embed"]: (K, V, D); sum over codebooks
+        e = 0.0
+        for k in range(AUDIO_CODEBOOKS):
+            e = e + jnp.take(params["embed"][k], tokens[..., k], axis=0)
+        return e
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _head(cfg: ModelConfig, params, h):
+    if cfg.tie_embeddings:
+        emb = constrain(params["embed"], ("vocab", None))
+        return jnp.einsum("bsd,vd->bsv", h, emb)
+    # JIT weight-gather: unshard d_model, keep vocab tensor-parallel
+    lm_head = gather_weight(params["lm_head"], (None, "vocab"))
+    logits = jnp.einsum("bsd,dv->bsv", h, lm_head)
+    if cfg.modality == MODALITY_AUDIO:
+        B, S, _ = logits.shape
+        return logits.reshape(B, S, AUDIO_CODEBOOKS, cfg.vocab_size)
+    return logits
+
+
+def _scan_blocks(cfg: ModelConfig, stacked, x, positions, remat: bool = False):
+    def body(carry, layer_params):
+        y, aux = blk.block_forward(cfg, layer_params, carry, positions)
+        return y, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    if not cfg.scan_layers:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], stacked)
+            x, a = body(x, layer)
+            aux = aux + a
+        return x, aux
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+def lm_apply(cfg: ModelConfig, params, tokens=None, *, prefix_embeds=None,
+             positions=None, remat: bool = False):
+    """Forward pass -> (logits, aux_loss).
+
+    ``prefix_embeds`` (B, S_img, D): VLM stub patch embeddings prepended to
+    the token embeddings. Returned logits cover the full (prefix + text)
+    sequence; callers mask the prefix for the loss.
+    """
+    if tokens is not None:
+        x = _embed_tokens(cfg, params, tokens)
+    else:
+        x = prefix_embeds
+        prefix_embeds = None
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    x = constrain(x, ("batch", None, None))
+    x, aux = _scan_blocks(cfg, params["blocks"], x, positions, remat)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(cfg, params, x)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, aux
+
+
+def _xent(logits, labels):
+    """Cross-entropy that stays sharded over a tensor-parallel vocab dim:
+    lse(logits) - logit[label], with the label pick as a masked reduction
+    (partial-reducible per vocab shard — no (B,S,V) cross-shard gather)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    return lse - picked
+
+
+def lm_loss(cfg: ModelConfig, params, batch, remat: bool = False):
+    """Next-token cross-entropy; batch dict with ``tokens``/``labels`` and
+    optional ``prefix_embeds``/``loss_mask``. Returns scalar mean loss."""
+    logits, aux = lm_apply(
+        cfg, params, batch.get("tokens"),
+        prefix_embeds=batch.get("prefix_embeds"), remat=remat)
+    labels = batch["labels"]
+    if cfg.modality == MODALITY_AUDIO:
+        # labels: (B,S,K); logits: (B,S,K,V)
+        nll = jnp.mean(_xent(logits, labels))
+    else:
+        if batch.get("prefix_embeds") is not None:
+            npfx = batch["prefix_embeds"].shape[1]
+            logits = logits[:, npfx:, :]
+        nll = _xent(logits, labels)
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            nll = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            nll = jnp.mean(nll)
+    return nll + aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
+    """Stacked (L-leading) cache pytree."""
+    one = blk.block_cache_init(cfg, batch, max_seq, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(), one)
+
+
+def lm_decode_step(cfg: ModelConfig, params, token, cache, pos):
+    """One decode step. token: (B,) int32 (or (B,K) audio). Returns
+    (logits (B, V[, K]), new_cache)."""
+    if cfg.modality == MODALITY_AUDIO:
+        x = _embed_tokens(cfg, params, token[:, None, :])
+    else:
+        x = _embed_tokens(cfg, params, token[:, None])
+
+    def body(carry, xs):
+        layer_params, layer_cache = xs
+        y, new_cache = blk.block_decode(cfg, layer_params, carry, layer_cache, pos)
+        return y, new_cache
+
+    if not cfg.scan_layers:
+        new_caches = []
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["blocks"])
+            lcache = jax.tree.map(lambda a: a[i], cache)
+            x, nc = body(x, (layer, lcache))
+            new_caches.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        logits = _head(cfg, params, x)
+        return logits[:, 0], new_cache
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(cfg, params, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bucketed dispatch.
+
+GShard-style *grouped* dispatch: the token stream is reshaped to
+``(G, g, D)`` groups; each group routes its ``g`` tokens into per-expert
+capacity buckets (``C = cf * g * k / E``) via one-hot einsums; expert FFNs
+run batched over the expert axis (shardable for expert parallelism); outputs
+are combined with router weights.
+
+Why groups: the dispatch tensor is ``(G, g, E, C)`` and the expert input is
+``(G, E, C, D)`` whose total size is ``T * cf * k * D`` — independent of E
+and g — so the formulation scales to 160-expert / 1M-token configurations.
+Sharding G over the data axis and E over the model axis reproduces the
+all-to-all communication pattern of expert parallelism under GSPMD.
+
+Supports DeepSeek-V2 style shared experts (always-on) alongside routed ones,
+plus a Switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, swiglu_init, swiglu_apply
+from repro.pjit_utils import constrain, gather_weight
+
+MOE_GROUP_TOKENS = 1024  # tokens per dispatch group (capped by seq len)
+# Gather-based dispatch (O(T*k*D) instead of the one-hot einsums' O(T*E*C*D))
+# is kept as an option but DISABLED by default: the §Perf dry-run iterations
+# showed that under GSPMD the combine gather costs an (G,E,C,D)-sized
+# all-gather/all-reduce (~6x the einsum path's (G,g,D) partial-sum
+# all-reduce), so the einsum path wins on the collective term at equal
+# compute within measurement noise. See EXPERIMENTS.md §Perf, deepseek-v2
+# iterations 2-3 (hypothesis refuted).
+GATHER_DISPATCH_MIN_E = 1_000_000
+
+
+def moe_init(cfg: ModelConfig, key, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    eff = m.expert_d_ff or cfg.d_ff
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    ke = jax.random.split(k_e, 3)
+    p = {
+        "router": dense_init(k_r, d, m.num_experts, dtype),
+        # expert weights stacked on a leading E axis
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, eff, dtype))(
+            jax.random.split(ke[0], m.num_experts)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, eff, dtype))(
+            jax.random.split(ke[1], m.num_experts)),
+        "w_down": jax.vmap(lambda k: dense_init(k, eff, d, dtype))(
+            jax.random.split(ke[2], m.num_experts)),
+    }
+    if m.num_shared_experts:
+        p["shared"] = swiglu_init(k_s, d, m.num_shared_experts * eff, dtype)
+    return p
+
+
+def group_capacity(m, group_tokens: int) -> int:
+    cap = int(m.capacity_factor * group_tokens * m.num_experts_per_tok / m.num_experts)
+    return max(cap, 4)
+
+
+def moe_apply(cfg: ModelConfig, params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    K, E = m.num_experts_per_tok, m.num_experts
+    g = min(S, MOE_GROUP_TOKENS)
+    assert (B * S) % g == 0, (B, S, g)
+    G = (B * S) // g
+    xt = x.reshape(G, g, D)
+    xt = constrain(xt, ("batch", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                          # (G,g,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                    # (G,g,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)          # (G,g,K,E)
+
+    # Switch-style load-balance auxiliary loss, computed over all tokens
+    me = jnp.mean(probs, axis=(0, 1))                                # (E,)
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))              # (E,)
+    aux = E * jnp.sum(me * ce) * m.router_aux_loss_coef
+
+    # position of each (token, k) routing inside its expert's bucket (per group)
+    C = group_capacity(m, g)
+    flat = onehot.reshape(G, g * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                            # exclusive
+    pos_in_e = jnp.sum(pos * flat, axis=-1).reshape(G, g, K)         # (G,g,K)
+    keep = pos_in_e < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    cdt = x.dtype
+    c_idx = jnp.where(keep, pos_in_e.astype(jnp.int32), C)          # C = drop
+    if E >= GATHER_DISPATCH_MIN_E:
+        # §Perf (gather dispatch): the dense one-hot dispatch/combine
+        # einsums cost O(T * E * C * D) flops — for 160-expert configs that
+        # rivals the model's entire useful compute. Scatter token ids into
+        # per-expert capacity slots and GATHER the tokens instead: O(T*k*D).
+        tok = jax.lax.broadcasted_iota(jnp.int32, (G, g, K), 1)
+        gidx = jax.lax.broadcasted_iota(jnp.int32, (G, g, K), 0)
+        idx = jnp.full((G, E, C + 1), g, jnp.int32)                  # g = pad
+        idx = idx.at[gidx, gate_idx, c_idx].set(tok, mode="drop")
+        idx = idx[..., :C]                                           # (G,E,C)
+        xt_pad = jnp.concatenate(
+            [xt, jnp.zeros((G, 1, D), xt.dtype)], axis=1)
+        ein = jax.vmap(lambda xg, ig: xg[ig])(
+            xt_pad, idx.reshape(G, E * C)).reshape(G, E, C, D)
+        # keep the gather shard-LOCAL (xt and idx are batch-sharded), then
+        # reshard to the expert-parallel layout as one explicit all-to-all —
+        # otherwise GSPMD lowers a cross-shard gather as masked all-reduces
+        ein = constrain(ein, ("batch", None, None, None))
+    else:
+        slot_oh = jax.nn.one_hot(c_idx, C + 1, dtype=cdt)[..., :C]
+        disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(cdt), slot_oh)
+        ein = jnp.einsum("gtec,gtd->gecd", disp, xt)                 # (G,E,C,D)
+    ein = constrain(ein, ("batch", "expert", None, None))
+    # §Perf (expert parallelism): when E divides the tensor-parallel axis,
+    # experts stay sharded in ID space ("expert" -> model axis) and tokens
+    # move to them (GSPMD inserts the all-to-all on the dispatch einsums)
+    # instead of all-gathering the whole expert tables every layer. For
+    # small-E archs (mixtral, E=8 < 16) the divisibility guard drops the
+    # expert axis and the (d, f)-sharded + JIT-weight-gather layout is used.
+    w_gate = gather_weight(params["w_gate"], ("expert", None, "tp"))
+    w_up = gather_weight(params["w_up"], ("expert", None, "tp"))
+    w_down = gather_weight(params["w_down"], ("expert", "tp", None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, w_gate))
+    h = h * jnp.einsum("gecd,edf->gecf", ein, w_up)
+    eout = jnp.einsum("gecf,efd->gecd", h, w_down)                   # (G,E,C,D)
+    eout = constrain(eout, ("batch", "expert", None, None))
+
+    if E >= GATHER_DISPATCH_MIN_E:
+        # gather each (token, k)'s expert output back and weight by gates;
+        # all-to-all back to the batch-sharded layout first so the gather
+        # stays shard-local
+        eout = constrain(eout, ("batch", None, None, None))
+        eflat = jnp.concatenate(
+            [eout.reshape(G, E * C, D),
+             jnp.zeros((G, 1, D), eout.dtype)], axis=1)
+        slot = jnp.where(keep, gate_idx * C + c_idx, E * C)          # (G,g,K)
+        vals = jax.vmap(lambda eg, sg: eg[sg])(
+            eflat, slot.reshape(G, g * K)).reshape(G, g, K, D)
+        out = jnp.einsum("gtkd,gtk->gtd", vals, gate_vals.astype(cdt))
+    else:
+        comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(cdt), slot_oh,
+                          gate_vals.astype(cdt))
+        out = jnp.einsum("gtec,gecd->gtd", comb, eout)
+    if m.num_shared_experts:
+        out = out + swiglu_apply(params["shared"], xt)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

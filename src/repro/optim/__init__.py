@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    make_optimizer, sgd, momentum, adam, rmsprop, OptState,
+)

@@ -1,0 +1,117 @@
+"""Optimizers (pure JAX, optax-like minimal API).
+
+The paper treats the learning algorithm phi as a black box; it evaluates
+mini-batch SGD (its main setting, Dekel et al.'s phi^mSGD), ADAM and RMSprop
+(Appendix A.5). All three are provided with one interface:
+
+    opt = make_optimizer(train_cfg)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+    name: str
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any = None       # first moment / momentum
+    nu: Any = None       # second moment
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def _apply_wd(grads, params, wd: float):
+    if wd == 0.0:
+        return grads
+    return jax.tree.map(lambda g, p: g + wd * p, grads, params)
+
+
+def sgd(lr: float, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state):
+        grads = _apply_wd(grads, params, weight_decay)
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new, OptState(step=state.step + 1)
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), mu=_zeros_like_tree(params))
+
+    def update(params, grads, state):
+        grads = _apply_wd(grads, params, weight_decay)
+        mu = jax.tree.map(lambda m, g: beta * m + g, state.mu, grads)
+        new = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        return new, OptState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_zeros_like_tree(params), nu=_zeros_like_tree(params))
+
+    def update(params, grads, state):
+        grads = _apply_wd(grads, params, weight_decay)
+        t = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+            params, mu, nu)
+        return new, OptState(step=t, mu=mu, nu=nu)
+
+    return Optimizer(init, update, "adam")
+
+
+def rmsprop(lr: float, decay: float = 0.9, eps: float = 1e-8,
+            weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), nu=_zeros_like_tree(params))
+
+    def update(params, grads, state):
+        grads = _apply_wd(grads, params, weight_decay)
+        nu = jax.tree.map(lambda v, g: decay * v + (1 - decay) * jnp.square(g),
+                          state.nu, grads)
+        new = jax.tree.map(lambda p, g, v: p - lr * g / (jnp.sqrt(v) + eps),
+                           params, grads, nu)
+        return new, OptState(step=state.step + 1, nu=nu)
+
+    return Optimizer(init, update, "rmsprop")
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "sgd":
+        return sgd(cfg.learning_rate, cfg.weight_decay)
+    if cfg.optimizer == "momentum":
+        return momentum(cfg.learning_rate, cfg.momentum, cfg.weight_decay)
+    if cfg.optimizer == "adam":
+        return adam(cfg.learning_rate, cfg.beta1, cfg.beta2, cfg.eps,
+                    cfg.weight_decay)
+    if cfg.optimizer == "rmsprop":
+        return rmsprop(cfg.learning_rate, cfg.momentum, cfg.eps,
+                       cfg.weight_decay)
+    raise ValueError(cfg.optimizer)

@@ -1,0 +1,95 @@
+"""Sharding-constraint hook usable from model code without a mesh.
+
+Model code calls ``constrain(x, ("data", None, "model"))`` with *logical*
+axis names. When no mesh context is active this is a no-op, so the same
+model runs unmodified on a single CPU device (tests, simulator) and under
+GSPMD (dry-run, production launch).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _active():
+    return getattr(_state, "ctx", None)
+
+
+@contextmanager
+def mesh_context(mesh, rules: dict | None = None):
+    """Activate ``mesh`` for ``constrain`` calls.
+
+    ``rules`` maps logical axis names to (tuples of) mesh axis names, e.g.
+    ``{"batch": ("pod", "data"), "embed": "data", "heads": "model"}``.
+    Logical names missing from the rules are unsharded.
+    """
+    prev = _active()
+    _state.ctx = (mesh, rules or {})
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def logical_to_spec(names, rules, mesh=None, dims=None) -> P:
+    """Map logical names to mesh axes; with ``dims`` given, drop any axis
+    that does not evenly divide its dim (e.g. 25 heads over a 16-way axis).
+    Duplicate mesh axes are dropped (first dim that can use an axis keeps
+    it) — lets callers express fallbacks like ("expert", None, "tp")."""
+    parts = []
+    used: set = set()
+    for i, n in enumerate(names):
+        axis = rules.get(n) if n is not None else None
+        if axis is not None and mesh is not None and dims is not None:
+            if dims[i] % _axis_size(mesh, axis) != 0:
+                axis = None
+        if axis is not None:
+            members = set(axis) if isinstance(axis, tuple) else {axis}
+            if members & used:
+                axis = None
+            else:
+                used |= members
+        parts.append(axis)
+    return P(*parts)
+
+
+def constrain(x, names):
+    """Apply a sharding constraint using logical axis ``names`` (or no-op)."""
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(names, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def gather_weight(x, names):
+    """JIT weight-gather constraint — applied only when the active rules set
+    ``_gather_weights`` (default True). Training/prefill programs gather the
+    (small) weights to keep the (huge) batch activations in place; decode
+    programs (a handful of tokens) leave weights fully sharded and let the
+    tiny activations move instead (EXPERIMENTS.md §Perf, decode iteration).
+    """
+    ctx = _active()
+    if ctx is None:
+        return x
+    _, rules = ctx
+    if not rules.get("_gather_weights", True):
+        return x
+    return constrain(x, names)

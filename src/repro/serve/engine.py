@@ -1,0 +1,75 @@
+"""Serving: prefill + batched decode against KV / SSM-state caches.
+
+``serve_step`` (one new token for a batch of requests, each with a
+``seq_len``-deep cache) is what the decode input shapes lower in the
+dry-run. The ``ServeEngine`` provides a minimal batched-request loop
+(greedy or temperature sampling) for the examples."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.model import (
+    init_lm_cache, lm_apply, lm_decode_step,
+)
+
+
+def make_prefill(cfg: ModelConfig):
+    """Prefill = full forward (logits for every position)."""
+
+    def prefill(params, tokens):
+        logits, _ = lm_apply(cfg, params, tokens)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return lm_decode_step(cfg, params, token, cache, pos)
+
+    return serve_step
+
+
+class ServeEngine:
+    """Minimal batched serving loop (greedy / temperature sampling)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 batch: int, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch = batch
+        self.cache = init_lm_cache(cfg, batch, max_seq, dtype)
+        self.pos = 0
+        self._step = jax.jit(make_decode_step(cfg))
+
+    def feed(self, tokens):
+        """Sequentially feed prompt tokens (B, S_prompt) through decode."""
+        logits = None
+        for t in range(tokens.shape[1]):
+            logits, self.cache = self._step(
+                self.params, self.cache, tokens[:, t], self.pos)
+            self.pos += 1
+        return logits
+
+    def generate(self, num_tokens: int, key=None, temperature: float = 0.0,
+                 first_logits=None):
+        out = []
+        logits = first_logits
+        for _ in range(num_tokens):
+            if logits is None:
+                raise ValueError("call feed() first")
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            out.append(nxt)
+            logits, self.cache = self._step(
+                self.params, self.cache, nxt, self.pos)
+            self.pos += 1
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,2 @@
+from repro.train.step import make_train_step, TrainState  # noqa: F401
+from repro.train.loop import run_protocol_training  # noqa: F401

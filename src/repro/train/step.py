@@ -1,0 +1,68 @@
+"""Baseline single-model training step (data-parallel / FSDP / TP).
+
+This is the sigma_1 (continuous averaging) reference point: by the paper's
+Proposition 3, per-step gradient averaging over m learners with batch B is
+*exactly* serial mini-batch SGD with batch mB and learning rate eta/m — so
+the standard data-parallel step doubles as the paper's consistency anchor
+and as the baseline for the roofline table.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.optim import make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def make_train_step(loss_fn: Callable[[Any, Any], jnp.ndarray],
+                    train: TrainConfig):
+    """Returns (init_state_fn, step_fn).
+
+    ``train.micro_batch > 1`` enables gradient accumulation: the global
+    batch is split into micro_batch slices scanned sequentially, shrinking
+    live activation memory ~micro_batch x at unchanged math (the mean of
+    per-microbatch mean-gradients equals the full-batch mean gradient for
+    equal slices) — the fit lever for configs whose dry-run
+    ``temp GB/chip`` exceeds HBM (EXPERIMENTS.md §Dry-run).
+    """
+    opt = make_optimizer(train)
+
+    def init_state(params) -> TrainState:
+        return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+    def grads_of(params, batch):
+        if not train.micro_batch or train.micro_batch <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        n = train.micro_batch
+
+        def slice_batch(b):
+            return jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), b)
+
+        def body(carry, micro):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, grad_acc, grads)), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros_like(p), params))
+        (loss_sum, grad_sum), _ = jax.lax.scan(body, zero, slice_batch(batch))
+        inv = 1.0 / n
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grad_sum)
+
+    def step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        params, opt_state = opt.update(state.params, grads, state.opt_state)
+        return TrainState(params, opt_state, state.step + 1), {"loss": loss}
+
+    return init_state, step

@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA device-count forcing here — smoke tests and
+benches must see the single real CPU device; only the dry-run (and the
+subprocess-based dry-run tests) force placeholder devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6):
+    import numpy as np
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def make_stacked(key, m, shapes=((4, 3), (7,))):
+    """Random m-learner model configuration (list-of-arrays pytree)."""
+    ks = jax.random.split(key, len(shapes))
+    return {f"w{i}": jax.random.normal(k, (m,) + s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}

@@ -1,0 +1,237 @@
+"""Unit + property tests for the synchronization operators (paper §3, Def. 2).
+
+Invariants (DESIGN.md §5):
+  1. mean invariance of every operator
+  2. divergence <= Delta after sigma_Delta fires
+  3. local-condition soundness (Kamp'14 Thm. 6)
+  5. worst case: dynamic comm <= periodic comm on the same schedule
+  6. Algorithm 2 reduces to Algorithm 1 for equal weights
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ProtocolConfig
+from repro.core import operators as ops
+from repro.core.divergence import (
+    divergence, local_condition_violated, per_learner_sq_distance, tree_mean,
+)
+
+from conftest import make_stacked, tree_allclose
+
+
+def _mk(m=6, seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    t = make_stacked(k, m)
+    return jax.tree.map(lambda x: x * scale, t)
+
+
+def _state(stacked, seed=0):
+    ref = tree_mean(stacked)
+    return ops.init_state(ref, seed)
+
+
+# ---------------------------------------------------------------------------
+# 1. mean invariance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", [
+    ("periodic", dict(b=1)),
+    ("fedavg", dict(b=1, fedavg_c=0.5)),
+    ("dynamic", dict(b=1, delta=1e-6)),            # forced sync
+    ("dynamic", dict(b=1, delta=1e6)),             # no sync
+    ("dynamic", dict(b=1, delta=0.5, augmentation="max_distance")),
+    ("dynamic", dict(b=1, delta=0.5, augmentation="random")),
+    ("dynamic", dict(b=1, delta=0.5, augmentation="all")),
+])
+def test_mean_invariance(kind, kw):
+    stacked = _mk(m=8, scale=2.0)
+    cfg = ProtocolConfig(kind=kind, **kw)
+    before = tree_mean(stacked)
+    new, _, _ = ops.apply_operator(cfg, stacked, _state(stacked))
+    after = tree_mean(new)
+    assert tree_allclose(before, after, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 2. divergence contract: delta(f) <= Delta after sigma_Delta
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delta", [1e-6, 0.1, 1.0, 10.0])
+def test_divergence_bounded_after_dynamic(delta):
+    stacked = _mk(m=10, scale=3.0)
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=delta)
+    state = _state(stacked)
+    new, new_state, rec = ops.apply_operator(cfg, stacked, state)
+    # after the operator either all local conditions hold w.r.t. the (new)
+    # reference, or a full sync happened (divergence 0)
+    d = float(divergence(new))
+    viol = local_condition_violated(new, new_state.ref, delta)
+    if not bool(jnp.any(viol)):
+        assert d <= delta + 1e-5
+    else:
+        # remaining violations are allowed only if no sync was needed
+        assert int(rec.syncs) == 1
+
+
+# ---------------------------------------------------------------------------
+# 3. local-condition soundness (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(m=st.integers(2, 12), seed=st.integers(0, 10_000),
+       delta=st.floats(0.01, 50.0))
+def test_local_condition_soundness(m, seed, delta):
+    """If no local condition is violated w.r.t. ANY common reference r,
+    then delta(f) <= Delta (Kamp'14 Thm. 6)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    stacked = make_stacked(k1, m)
+    ref = jax.tree.map(lambda x: x[0] + 0.1, make_stacked(k2, 1))
+    ref = jax.tree.map(lambda x: x, ref)
+    dists = per_learner_sq_distance(stacked, ref)
+    if bool(jnp.all(dists <= delta)):
+        assert float(divergence(stacked)) <= delta + 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(2, 8), seed=st.integers(0, 10_000))
+def test_divergence_matches_naive(m, seed):
+    stacked = make_stacked(jax.random.PRNGKey(seed), m)
+    mean = tree_mean(stacked)
+    naive = 0.0
+    for i in range(m):
+        fi = jax.tree.map(lambda x: x[i], stacked)
+        naive += sum(
+            float(jnp.sum((a - b) ** 2))
+            for a, b in zip(jax.tree.leaves(fi), jax.tree.leaves(mean)))
+    naive /= m
+    assert np.isclose(float(divergence(stacked)), naive, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# operator mechanics
+# ---------------------------------------------------------------------------
+
+def test_periodic_schedule():
+    stacked = _mk(m=4)
+    cfg = ProtocolConfig(kind="periodic", b=3)
+    state = _state(stacked)
+    syncs = []
+    for t in range(9):
+        stacked_new, state, rec = ops.apply_operator(cfg, stacked, state)
+        syncs.append(int(rec.syncs))
+    assert syncs == [0, 0, 1, 0, 0, 1, 0, 0, 1]
+
+
+def test_continuous_is_periodic_b1():
+    stacked = _mk(m=4, scale=2.0)
+    cfg = ProtocolConfig(kind="continuous", b=1)
+    new, _, rec = ops.apply_operator(cfg, stacked, _state(stacked))
+    mean = tree_mean(stacked)
+    for i in range(4):
+        fi = jax.tree.map(lambda x: x[i], new)
+        assert tree_allclose(fi, mean, rtol=1e-5, atol=1e-6)
+    assert int(rec.full_syncs) == 1
+
+
+def test_fedavg_subset_size():
+    m = 10
+    stacked = _mk(m=m, scale=2.0)
+    cfg = ProtocolConfig(kind="fedavg", b=1, fedavg_c=0.3)
+    new, _, rec = ops.apply_operator(cfg, stacked, _state(stacked))
+    # exactly ceil(C*m)=3 learners pulled+pushed
+    assert int(rec.model_up) == 3 and int(rec.model_down) == 3
+    # the other 7 are untouched
+    changed = 0
+    for i in range(m):
+        a = jax.tree.map(lambda x: x[i], new)
+        b = jax.tree.map(lambda x: x[i], stacked)
+        if not tree_allclose(a, b, rtol=1e-7, atol=1e-8):
+            changed += 1
+    assert changed == 3
+
+
+def test_dynamic_no_violation_no_comm():
+    stacked = _mk(m=6, scale=1.0)
+    ref = tree_mean(stacked)
+    # delta larger than any ||f_i - r||^2 -> zero communication
+    dmax = float(jnp.max(per_learner_sq_distance(stacked, ref)))
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=dmax * 1.01)
+    new, _, rec = ops.apply_operator(cfg, stacked, ops.init_state(ref))
+    assert int(rec.model_up) == 0 and int(rec.model_down) == 0
+    assert tree_allclose(new, stacked)
+
+
+def test_dynamic_partial_balancing_cheaper_than_full():
+    """With one outlier learner, balancing should average a subset, not all."""
+    m = 8
+    stacked = _mk(m=m, scale=0.01)
+    ref = tree_mean(stacked)
+    # push learner 0 out of the safe zone — by an amount a small subset can
+    # balance: ||mean_B - r||^2 ~ off^2 * n_params / |B|^2 <= Delta for
+    # |B| ~ 3 (n_params = 19, off = 0.15)
+    stacked = jax.tree.map(
+        lambda x: x.at[0].set(x[0] + 0.15), stacked)
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=0.05,
+                         augmentation="max_distance")
+    new, state, rec = ops.apply_operator(cfg, stacked, ops.init_state(ref))
+    assert int(rec.syncs) == 1
+    assert int(rec.model_up) < m            # partial, not full
+    assert int(rec.full_syncs) == 0
+    # the balanced subset satisfies the safe-zone condition afterwards
+    d = per_learner_sq_distance(new, state.ref)
+    assert float(jnp.max(d)) <= 0.2         # outlier got pulled in
+
+
+def test_dynamic_worst_case_full_sync_bounded_by_periodic():
+    """Invariant 5: per round, dynamic transfers <= periodic's 2m."""
+    m = 6
+    stacked = _mk(m=m, scale=10.0)
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=1e-8)
+    _, _, rec = ops.apply_operator(cfg, stacked, _state(stacked))
+    assert int(rec.model_up) + int(rec.model_down) <= 2 * m
+
+
+def test_violation_counter_forces_full_sync():
+    """Algorithm 1: when the violation counter reaches m, B <- [m]."""
+    m = 4
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=0.05,
+                         augmentation="max_distance")
+    stacked = _mk(m=m, scale=0.01)
+    state = ops.init_state(tree_mean(stacked))
+    full_syncs = 0
+    for t in range(30):
+        # keep perturbing one learner so violations accumulate
+        stacked = jax.tree.map(
+            lambda x: x.at[t % m].add(0.4), stacked)
+        stacked, state, rec = ops.apply_operator(cfg, stacked, state)
+        full_syncs += int(rec.full_syncs)
+    assert full_syncs >= 1
+
+
+# ---------------------------------------------------------------------------
+# 6. weighted averaging (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def test_weighted_reduces_to_unweighted():
+    stacked = _mk(m=5, scale=2.0)
+    cfg_w = ProtocolConfig(kind="dynamic", b=1, delta=1e-6, weighted=True)
+    cfg_u = ProtocolConfig(kind="dynamic", b=1, delta=1e-6)
+    w = jnp.full((5,), 7.0)
+    new_w, _, _ = ops.apply_operator(cfg_w, stacked, _state(stacked), w)
+    new_u, _, _ = ops.apply_operator(cfg_u, stacked, _state(stacked))
+    assert tree_allclose(new_w, new_u, rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_mean_is_sample_weighted():
+    m = 3
+    stacked = _mk(m=m, scale=1.0)
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    cfg = ProtocolConfig(kind="periodic", b=1, weighted=True)
+    new, _, _ = ops.apply_operator(cfg, stacked, _state(stacked), w)
+    expect = jax.tree.map(
+        lambda x: jnp.einsum("m...,m->...", x, w) / jnp.sum(w), stacked)
+    got = jax.tree.map(lambda x: x[0], new)
+    assert tree_allclose(got, expect, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,140 @@
+"""Equivalence tests for the §Perf optimization paths: every optimized
+implementation must be numerically interchangeable with the baseline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import apply_rope
+
+
+def test_banded_swa_matches_dense_masked():
+    """Block-banded sliding-window attention == dense masked attention."""
+    cfg = dataclasses.replace(get_arch("mixtral-8x22b", smoke=True),
+                              sliding_window=16)
+    p = attn.attn_init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 64                       # S = 4 * window -> banded path
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.1
+    pos = jnp.arange(S, dtype=jnp.int32)
+    y_banded = attn.gqa_forward(cfg, p, x, pos)
+
+    q, k, v = attn._project_qkv(cfg, p, x)
+    posb = jnp.broadcast_to(pos[None], (B, S))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    mask = attn.causal_mask(posb, posb, cfg.sliding_window)
+    hd = cfg.resolved_head_dim
+    G = cfg.num_heads // cfg.num_kv_heads
+    out = attn._sdpa(q.reshape(B, S, cfg.num_kv_heads, G, hd), k, v, mask,
+                     1.0 / np.sqrt(hd))
+    y_dense = jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["w_o"])
+    np.testing.assert_allclose(np.asarray(y_banded), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("S", [32, 48, 100])
+def test_banded_swa_various_lengths(S):
+    cfg = dataclasses.replace(get_arch("mixtral-8x22b", smoke=True),
+                              sliding_window=16)
+    p = attn.attn_init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, S, cfg.d_model)) * 0.1
+    pos = jnp.arange(S, dtype=jnp.int32)
+    # banded path triggers only for S % w == 0 — both paths must agree with
+    # a decode replay regardless
+    y = attn.gqa_forward(cfg, p, x, pos)
+    assert y.shape == (1, S, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(y)))
+
+
+def test_moe_gather_dispatch_equals_einsum():
+    cfg = get_arch("deepseek-v2-236b", smoke=True)
+    p = moe_mod.moe_init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.3
+    old = moe_mod.GATHER_DISPATCH_MIN_E
+    try:
+        moe_mod.GATHER_DISPATCH_MIN_E = 1
+        y_g, aux_g = moe_mod.moe_apply(cfg, p, x)
+        moe_mod.GATHER_DISPATCH_MIN_E = 10 ** 9
+        y_e, aux_e = moe_mod.moe_apply(cfg, p, x)
+    finally:
+        moe_mod.GATHER_DISPATCH_MIN_E = old
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_e),
+                               rtol=1e-4, atol=1e-5)
+    assert np.isclose(float(aux_g), float(aux_e))
+
+
+def test_expert_parallel_param_specs():
+    """E divisible by tp -> expert-parallel layout; otherwise dense."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as shd
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    axes = shd.default_axes_map(False)
+    params = {"blocks": {"moe": {
+        "w_gate": jax.ShapeDtypeStruct((60, 160, 5120, 1536), jnp.bfloat16),
+        "w_down": jax.ShapeDtypeStruct((60, 160, 1536, 5120), jnp.bfloat16),
+    }}}
+    specs = shd.param_spec_tree(params, mesh, axes)
+    assert specs["blocks"]["moe"]["w_gate"] == P(None, "model", "data")
+    assert specs["blocks"]["moe"]["w_down"] == P(None, "model", None, "data")
+    # E = 8: not divisible -> dense (d, f) layout
+    params8 = {"blocks": {"moe": {
+        "w_gate": jax.ShapeDtypeStruct((56, 8, 6144, 16384), jnp.bfloat16)}}}
+    specs8 = shd.param_spec_tree(params8, mesh, axes)
+    assert specs8["blocks"]["moe"]["w_gate"] == P(None, None, "data", "model")
+
+
+def test_spmd_axis_name_dynamic_step_numerics():
+    """spmd_axis_name must not change the dynamic step's numerics (CPU,
+    no mesh: plain vmap semantics)."""
+    from repro.config import ProtocolConfig, TrainConfig
+    from repro.core.distributed import (
+        init_dynamic_state, make_dynamic_train_step)
+    from repro.models.cnn import cnn_loss, init_cnn_params
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    train = TrainConfig(optimizer="sgd", learning_rate=0.1)
+    proto = ProtocolConfig(kind="dynamic", b=1, delta=1e9)
+    m = 3
+    state = init_dynamic_state(
+        lambda k: init_cnn_params(cfg, k), jax.random.PRNGKey(0), m, train)
+    from repro.data.synthetic import SyntheticMNIST
+    src = SyntheticMNIST(seed=0, image_size=14)
+    batch = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[src.sample(jax.random.PRNGKey(i), 8) for i in range(m)])
+    s1, m1 = make_dynamic_train_step(loss_fn, proto, train, m)(state, batch)
+    s2, m2 = make_dynamic_train_step(loss_fn, proto, train, m,
+                                     spmd_axis_name=None)(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]))
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """micro_batch gradient accumulation == one full-batch step exactly."""
+    from repro.config import TrainConfig
+    from repro.models.cnn import cnn_loss, init_cnn_params
+    from repro.train.step import make_train_step
+    from repro.data.synthetic import SyntheticMNIST
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    params = init_cnn_params(cfg, jax.random.PRNGKey(0))
+    src = SyntheticMNIST(seed=0, image_size=14)
+    batch = src.sample(jax.random.PRNGKey(1), 16)
+
+    def one_step(micro):
+        init_state, step = make_train_step(
+            loss_fn, TrainConfig(optimizer="sgd", learning_rate=0.1,
+                                 micro_batch=micro))
+        state, metrics = jax.jit(step)(init_state(params), batch)
+        return state.params, float(metrics["loss"])
+
+    p_full, l_full = one_step(0)
+    p_micro, l_micro = one_step(4)
+    assert np.isclose(l_full, l_micro, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_micro)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,125 @@
+"""Integration tests for the m-learner simulator (paper Section 5 dynamics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ProtocolConfig, TrainConfig, get_arch
+from repro.core.protocol import DecentralizedLearner
+from repro.data.pipeline import LearnerStreams
+from repro.data.synthetic import GraphicalModelStream, SyntheticMNIST
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.train.loop import run_protocol_training
+
+
+def _mlp_setup():
+    cfg = get_arch("drift_mlp", smoke=True)
+    return (lambda p, b: cnn_loss(cfg, p, b),
+            lambda k: init_cnn_params(cfg, k))
+
+
+def test_learners_learn_and_account_comm():
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    dl, traj = run_protocol_training(
+        loss_fn, init_fn, src, m=5, rounds=60,
+        protocol=ProtocolConfig(kind="periodic", b=10),
+        train=TrainConfig(optimizer="sgd", learning_rate=0.05),
+        batch=10, record_every=10)
+    # loss per round decreases
+    per_round = np.diff([0.0] + traj.cumulative_loss)
+    assert per_round[-1] < per_round[0]
+    # communication: 6 syncs * 2 transfers * m models
+    assert dl.comm_totals["syncs"] == 6
+    assert dl.comm_totals["model_up"] == 6 * 5
+    assert dl.comm_bytes() == 6 * 2 * 5 * dl.model_size * 4
+
+
+def test_dynamic_beats_periodic_comm_similar_loss():
+    """The paper's core claim (Fig. 5.1) on a small task."""
+    loss_fn, init_fn = _mlp_setup()
+
+    def run(proto, seed=0):
+        src = GraphicalModelStream(seed=1, drift_prob=0.0)
+        return run_protocol_training(
+            loss_fn, init_fn, src, m=8, rounds=80, protocol=proto,
+            train=TrainConfig(optimizer="sgd", learning_rate=0.05),
+            batch=10, seed=seed)
+
+    dl_p, _ = run(ProtocolConfig(kind="periodic", b=10))
+    dl_d, _ = run(ProtocolConfig(kind="dynamic", b=10, delta=0.3))
+    assert dl_d.comm_bytes() < dl_p.comm_bytes()
+    # predictive performance within 15%
+    assert dl_d.cumulative_loss < 1.15 * dl_p.cumulative_loss
+
+
+def test_drift_triggers_communication_burst():
+    """Fig. 5.4(b): dynamic averaging communicates right after a drift."""
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    streams = LearnerStreams(src, 6, batch=10, seed=0)
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, 6,
+        ProtocolConfig(kind="dynamic", b=2, delta=0.5),
+        TrainConfig(optimizer="sgd", learning_rate=0.1))
+    # converge first
+    for _ in range(100):
+        dl.step(streams.next())
+    before = dl.comm_totals["syncs"]
+    for _ in range(24):
+        dl.step(streams.next())
+    calm = dl.comm_totals["syncs"] - before
+    src.force_drift()
+    before = dl.comm_totals["syncs"]
+    for _ in range(24):
+        dl.step(streams.next())
+    burst = dl.comm_totals["syncs"] - before
+    assert burst >= calm
+    assert burst >= 1
+
+
+def test_heterogeneous_init_increases_divergence():
+    loss_fn, init_fn = _mlp_setup()
+    dl_hom = DecentralizedLearner(
+        loss_fn, init_fn, 4, ProtocolConfig(kind="nosync"),
+        track_divergence=True)
+    dl_het = DecentralizedLearner(
+        loss_fn, init_fn, 4, ProtocolConfig(kind="nosync"),
+        init_heterogeneity=3.0, track_divergence=True)
+    from repro.core.divergence import divergence
+    assert float(divergence(dl_hom.params)) < 1e-10
+    assert float(divergence(dl_het.params)) > 1e-3
+
+
+def test_unbalanced_streams_weighted_protocol():
+    """Algorithm 2: unbalanced B^i with weighted averaging runs and the
+    weighted mean preserves the sample-weighted model (App. C)."""
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    sizes = [5, 10, 20]
+    streams = LearnerStreams(src, 3, batch=10, seed=0, batch_sizes=sizes)
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, 3,
+        ProtocolConfig(kind="dynamic", b=1, delta=1e-9, weighted=True),
+        TrainConfig(optimizer="sgd", learning_rate=0.05),
+        sample_weights=streams.weights)
+    for _ in range(5):
+        m = dl.step(streams.next())
+    assert dl.comm_totals["syncs"] >= 1
+    assert np.isfinite(dl.cumulative_loss)
+
+
+def test_mnist_cnn_protocol_end_to_end():
+    """The paper's main experimental setup, reduced: CNN + dynamic avg."""
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+    src = SyntheticMNIST(seed=0, image_size=14)
+    dl, traj = run_protocol_training(
+        loss_fn, init_fn, src, m=4, rounds=50,
+        protocol=ProtocolConfig(kind="dynamic", b=5, delta=0.5),
+        train=TrainConfig(optimizer="sgd", learning_rate=0.1), batch=10)
+    from repro.models.cnn import cnn_accuracy
+    batch = src.sample(jax.random.PRNGKey(99), 256)
+    acc = float(cnn_accuracy(cfg, dl.mean_model(), batch))
+    assert acc > 0.5       # well above 10% chance

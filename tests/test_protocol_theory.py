@@ -1,0 +1,117 @@
+"""Theory tests: Proposition 3 (exact), consistency/adaptiveness sanity.
+
+Prop. 3: continuous averaging of m mini-batch-SGD learners (batch B, lr eta)
+equals ONE serial mini-batch SGD step with batch mB and lr eta/m — an exact
+algebraic identity we verify to float tolerance on a real CNN.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ProtocolConfig, TrainConfig, get_arch
+from repro.core import operators as ops
+from repro.core.divergence import tree_mean
+from repro.core.protocol import DecentralizedLearner, SerialLearner
+from repro.data.synthetic import SyntheticMNIST
+from repro.models.cnn import cnn_loss, init_cnn_params
+
+from conftest import tree_allclose
+
+
+def _cnn_setup():
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+    return cfg, loss_fn, init_fn
+
+
+def test_proposition3_exact():
+    m, B, eta = 4, 8, 0.05
+    cfg, loss_fn, init_fn = _cnn_setup()
+    src = SyntheticMNIST(seed=0, image_size=14)
+    key = jax.random.PRNGKey(1)
+    batches = [src.sample(jax.random.fold_in(key, i), B) for i in range(m)]
+
+    params0 = init_fn(jax.random.PRNGKey(2))
+
+    # m learners: one local SGD step each, then average (sigma_1)
+    def local_step(p, b):
+        g = jax.grad(loss_fn)(p, b)
+        # phi^mSGD as in the paper: f - eta * SUM of per-sample gradients
+        # (mean-loss grad * B = sum grad)
+        return jax.tree.map(lambda x, gg: x - eta * B * gg, p, g)
+
+    locals_ = [local_step(params0, b) for b in batches]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
+    averaged = tree_mean(stacked)
+
+    # serial: ONE step with batch mB and lr eta/m
+    big = jax.tree.map(lambda *xs: jnp.concatenate(xs), *batches)
+    g = jax.grad(loss_fn)(params0, big)
+    serial = jax.tree.map(
+        lambda x, gg: x - (eta / m) * (m * B) * gg, params0, g)
+
+    assert tree_allclose(averaged, serial, rtol=1e-4, atol=1e-6)
+
+
+def test_nosync_divergence_grows_sync_resets():
+    """Sanity for Fig 1.1(a): without sync local models diverge; a sync
+    brings divergence to ~0."""
+    cfg, loss_fn, init_fn = _cnn_setup()
+    src = SyntheticMNIST(seed=0, image_size=14)
+    m = 4
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, m, ProtocolConfig(kind="nosync"),
+        TrainConfig(optimizer="sgd", learning_rate=0.1),
+        track_divergence=True)
+    from repro.data.pipeline import LearnerStreams
+    streams = LearnerStreams(src, m, batch=8, seed=3)
+    divs = [float(dl.step(streams.next()).divergence) for _ in range(10)]
+    assert divs[-1] > divs[0]
+
+    dl2 = DecentralizedLearner(
+        loss_fn, init_fn, m, ProtocolConfig(kind="continuous", b=1),
+        TrainConfig(optimizer="sgd", learning_rate=0.1),
+        track_divergence=True)
+    streams2 = LearnerStreams(src, m, batch=8, seed=3)
+    d = None
+    for _ in range(3):
+        d = float(dl2.step(streams2.next()).divergence)
+    assert d < 1e-8   # post-sync divergence is zero every round
+
+
+def test_dynamic_comm_bounded_by_periodic_same_b():
+    """Adaptiveness sanity: on the same stream, sigma_Delta communicates no
+    more than sigma_b (worst case equals it)."""
+    cfg, loss_fn, init_fn = _cnn_setup()
+    src = SyntheticMNIST(seed=0, image_size=14)
+    m, rounds = 6, 40
+
+    def run(proto):
+        from repro.data.pipeline import LearnerStreams
+        dl = DecentralizedLearner(
+            loss_fn, init_fn, m, proto,
+            TrainConfig(optimizer="sgd", learning_rate=0.1), seed=0)
+        streams = LearnerStreams(src, m, batch=8, seed=5)
+        for _ in range(rounds):
+            dl.step(streams.next())
+        return dl
+
+    periodic = run(ProtocolConfig(kind="periodic", b=5))
+    dynamic = run(ProtocolConfig(kind="dynamic", b=5, delta=0.5))
+    assert dynamic.comm_bytes() <= periodic.comm_bytes()
+    # and with a loose threshold the saving is real
+    assert dynamic.comm_bytes() < 0.9 * periodic.comm_bytes()
+
+
+def test_serial_learner_learns():
+    cfg, loss_fn, init_fn = _cnn_setup()
+    src = SyntheticMNIST(seed=0, image_size=14)
+    sl = SerialLearner(loss_fn, init_fn,
+                       TrainConfig(optimizer="sgd", learning_rate=0.1))
+    key = jax.random.PRNGKey(0)
+    losses = []
+    for t in range(60):
+        losses.append(float(sl.step(src.sample(jax.random.fold_in(key, t), 32))))
+    assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:10])

@@ -1,0 +1,67 @@
+"""End-to-end system behaviour: the paper's full pipeline on a small task.
+
+One test = one claim of the paper, reduced to CPU scale:
+  * a fleet of learners + dynamic averaging reaches the periodic baseline's
+    loss with strictly less communication (Fig. 5.1 / 5.3),
+  * the protocol is black-box in the optimizer (Fig. A.6),
+  * scale-out in m keeps the advantage (Fig. 6.1).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ProtocolConfig, TrainConfig, get_arch
+from repro.data.synthetic import SyntheticMNIST
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.train.loop import run_protocol_training
+
+
+def _setup():
+    cfg = get_arch("mnist_cnn", smoke=True)
+    return (lambda p, b: cnn_loss(cfg, p, b),
+            lambda k: init_cnn_params(cfg, k))
+
+
+def _run(proto, m=6, rounds=60, optimizer="sgd", lr=0.1, seed=0):
+    loss_fn, init_fn = _setup()
+    src = SyntheticMNIST(seed=0, image_size=14)
+    return run_protocol_training(
+        loss_fn, init_fn, src, m=m, rounds=rounds, protocol=proto,
+        train=TrainConfig(optimizer=optimizer, learning_rate=lr),
+        batch=10, seed=seed)
+
+
+def test_dynamic_vs_periodic_tradeoff():
+    dl_p, _ = _run(ProtocolConfig(kind="periodic", b=10))
+    dl_d, _ = _run(ProtocolConfig(kind="dynamic", b=10, delta=0.7))
+    assert dl_d.comm_bytes() < dl_p.comm_bytes()
+    assert dl_d.cumulative_loss < 1.2 * dl_p.cumulative_loss
+
+
+def test_fedavg_vs_dynamic():
+    dl_f, _ = _run(ProtocolConfig(kind="fedavg", b=10, fedavg_c=0.3))
+    dl_d, _ = _run(ProtocolConfig(kind="dynamic", b=10, delta=0.7))
+    assert np.isfinite(dl_d.cumulative_loss)
+    assert np.isfinite(dl_f.cumulative_loss)
+    # FedAvg's comm is fixed-rate; dynamic adapts downward as models converge
+    assert dl_d.comm_bytes() <= dl_f.comm_bytes() * 2
+
+
+@pytest.mark.parametrize("optimizer,lr", [
+    ("sgd", 0.1), ("adam", 1e-3), ("rmsprop", 1e-3)])
+def test_black_box_optimizers(optimizer, lr):
+    """Paper A.5: the protocol works with phi = SGD / Adam / RMSprop."""
+    dl, _ = _run(ProtocolConfig(kind="dynamic", b=5, delta=0.7),
+                 rounds=40, optimizer=optimizer, lr=lr)
+    per_round = dl.cumulative_loss / dl.rounds
+    assert np.isfinite(per_round)
+    assert dl.comm_totals["syncs"] >= 0
+
+
+def test_scaleout_m():
+    """Fig. 6.1: growing m keeps communication sublinear vs periodic."""
+    for m in (4, 8):
+        dl_p, _ = _run(ProtocolConfig(kind="periodic", b=10), m=m, rounds=40)
+        dl_d, _ = _run(ProtocolConfig(kind="dynamic", b=10, delta=0.7),
+                       m=m, rounds=40)
+        assert dl_d.comm_bytes() <= dl_p.comm_bytes()
