@@ -41,11 +41,10 @@ def run(quick: bool = True):
             loss_fn, init_fn, m,
             ProtocolConfig(kind="dynamic", b=b, delta=delta),
             TrainConfig(optimizer="sgd", learning_rate=0.1))
-        half_syncs = None
-        for t in range(rounds):
-            dl.step(streams.next())
-            if t == rounds // 2:
-                half_syncs = dl.comm_totals["syncs"]
+        # scanned driver: two equal chunks, capturing syncs at the midpoint
+        dl.run_chunk(streams.next_chunk(rounds // 2 + 1))
+        half_syncs = dl.comm_totals["syncs"]
+        dl.run_chunk(streams.next_chunk(rounds - rounds // 2 - 1))
         checks = rounds // b
         syncs = dl.comm_totals["syncs"]
         rows.append({

@@ -14,6 +14,7 @@ from repro.core.protocol import DecentralizedLearner
 from repro.data.pipeline import LearnerStreams
 from repro.data.synthetic import GraphicalModelStream
 from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.train.loop import run_drift_segments
 
 NAME = "fig5_4_drift"
 PAPER_REF = "Figure 5.4, Appendix A.3"
@@ -28,14 +29,10 @@ def _run_one(proto, m, rounds, drift_rounds, seed=0):
     dl = DecentralizedLearner(
         loss_fn, init_fn, m, proto,
         TrainConfig(optimizer="sgd", learning_rate=0.05), seed=seed)
-    sync_curve, loss_curve = [], []
-    for t in range(rounds):
-        if t in drift_rounds:
-            src.force_drift()
-        dl.step(streams.next())
-        sync_curve.append(dl.comm_totals["syncs"])
-        loss_curve.append(dl.cumulative_loss)
-    return dl, np.asarray(sync_curve), np.asarray(loss_curve)
+    # drift rounds are known: scan the segments between them
+    sync_curve, loss_curve = run_drift_segments(
+        dl, streams, src, rounds, drift_rounds)
+    return dl, sync_curve, loss_curve
 
 
 def run(quick: bool = True):

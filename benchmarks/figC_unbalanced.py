@@ -34,8 +34,9 @@ def run(quick: bool = True):
             ProtocolConfig(kind="dynamic", b=5, delta=0.3, weighted=weighted),
             TrainConfig(optimizer="sgd", learning_rate=0.05),
             sample_weights=streams.weights if weighted else None)
-        for _ in range(rounds):
-            dl.step(streams.next())
+        # unbalanced B^i keeps host-side sampling, but the rounds themselves
+        # run as one scanned chunk
+        dl.run_chunk(streams.next_chunk(rounds))
         rows.append({
             "variant": name,
             "cumulative_loss": round(dl.cumulative_loss, 2),

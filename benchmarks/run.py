@@ -24,9 +24,11 @@ from benchmarks import (
     figC_unbalanced,
     kernel_bench,
     roofline_table,
+    scan_driver,
 )
 
 ALL = [
+    scan_driver,
     fig5_1_dynamic_vs_periodic,
     dynamic_amortized,
     fig5_2_fedavg,

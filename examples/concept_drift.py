@@ -5,6 +5,10 @@ App. A.3). We force two concept drifts and print the per-window sync rate:
 dynamic averaging goes quiet between drifts and bursts right after them,
 while periodic averaging pays the same bill all the time.
 
+Drift rounds are known up front, so the run is three scanned chunks
+(``run_chunk``) with a ``force_drift`` between them; the per-round sync
+history is reconstructed from the chunks' stacked comm records.
+
     PYTHONPATH=src python examples/concept_drift.py
 """
 from repro.config import ProtocolConfig, TrainConfig, get_arch
@@ -12,6 +16,7 @@ from repro.core.protocol import DecentralizedLearner
 from repro.data.pipeline import LearnerStreams
 from repro.data.synthetic import GraphicalModelStream
 from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.train.loop import run_drift_segments
 
 ROUNDS, WINDOW = 240, 20
 DRIFTS = (80, 160)
@@ -31,12 +36,7 @@ def main():
         dl = DecentralizedLearner(
             loss_fn, init_fn, 8, proto,
             TrainConfig(optimizer="sgd", learning_rate=0.1))
-        sync_hist = []
-        for t in range(ROUNDS):
-            if t in DRIFTS:
-                src.force_drift()
-            dl.step(streams.next())
-            sync_hist.append(dl.comm_totals["syncs"])
+        sync_hist, _ = run_drift_segments(dl, streams, src, ROUNDS, DRIFTS)
         print(f"\n{name}: total syncs {sync_hist[-1]}, "
               f"comm {dl.comm_bytes()/1e6:.1f}MB, "
               f"cumulative loss {dl.cumulative_loss:.0f}")

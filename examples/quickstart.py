@@ -5,6 +5,10 @@ Ten learners train the paper's MNIST CNN; the dynamic averaging protocol
 conditions, and we compare its communication bill against periodic
 averaging at equal predictive performance.
 
+``run_protocol_training`` executes the rounds through the scanned chunk
+driver (``DecentralizedLearner.run_chunk``): each chunk of rounds is one
+compiled ``lax.scan`` program, not one jitted dispatch per round.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax

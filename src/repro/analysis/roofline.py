@@ -61,7 +61,8 @@ def analyze(name: str, compiled, num_devices: int,
             peak_flops: float = PEAK_FLOPS_BF16,
             hbm_bw: float = HBM_BW,
             link_bw: float = ICI_BW_PER_LINK) -> RooflineReport:
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     stats = hlo_mod.parse_collectives(compiled.as_text(), num_devices)

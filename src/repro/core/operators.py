@@ -149,8 +149,9 @@ def _balance(cfg: ProtocolConfig, stacked, ref, violated, rng, weights=None):
     """Coordinator balancing: augment the violator set B until the partial
     average re-enters the safe zone ||mean_B - r||^2 <= Delta or B = [m].
 
-    Returns (final mask B, mean_B, polls) where polls counts coordinator
-    queries to non-violating nodes (each poll = 1 model up).
+    Returns (final mask B, mean_B). The caller derives poll counts from
+    the mask (|B| minus the true violators) — the mask is the single
+    source of truth for who the coordinator contacted.
     """
     m = _num_learners(stacked)
     dists = per_learner_sq_distance(stacked, ref)     # (m,) — augment priority
@@ -172,26 +173,25 @@ def _balance(cfg: ProtocolConfig, stacked, ref, violated, rng, weights=None):
     if cfg.augmentation == "all":
         full = jnp.ones((m,), bool)
         mean, _ = mean_dist(full)
-        polls = jnp.int32(m) - jnp.sum(violated).astype(jnp.int32)
-        return full, mean, polls
+        return full, mean
 
     _, d0 = mean_dist(violated)
 
     def cond(carry):
-        mask, d, _ = carry
+        mask, d = carry
         return jnp.logical_and(~jnp.all(mask), d > cfg.delta)
 
     def body(carry):
-        mask, _, polls = carry
+        mask, _ = carry
         cand = jnp.where(mask, -jnp.inf, prio)
         nxt = jnp.argmax(cand)
         mask = mask.at[nxt].set(True)
         _, d = mean_dist(mask)
-        return mask, d, polls + 1
+        return mask, d
 
-    mask, _, polls = jax.lax.while_loop(cond, body, (violated, d0, jnp.int32(0)))
+    mask, _ = jax.lax.while_loop(cond, body, (violated, d0))
     mean = _masked_mean(stacked, mask, weights)
-    return mask, mean, polls
+    return mask, mean
 
 
 def dynamic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None):
@@ -218,7 +218,7 @@ def dynamic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None):
             force_full = v_new >= m
             base = jnp.where(force_full, jnp.ones((m,), bool), violated)
             v_reset = jnp.where(force_full, jnp.int32(0), v_new)
-            mask, mean, polls = _balance(cfg, stacked, state.ref, base, sub, weights)
+            mask, mean = _balance(cfg, stacked, state.ref, base, sub, weights)
             full = jnp.all(mask)
             v_final = jnp.where(full, jnp.int32(0), v_reset)
             newcfg = _tree_select(mask, _broadcast_model(mean, m), stacked)
@@ -226,6 +226,11 @@ def dynamic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None):
             new_ref = jax.tree.map(
                 lambda a, b: jnp.where(full, a, b), mean, state.ref)
             nsync = jnp.sum(mask).astype(jnp.int32)
+            # every member of the final B that did not itself violate was
+            # polled by the coordinator — counting nsync - nviol covers the
+            # balancing loop AND the forced-full path (where _balance sees
+            # an all-true mask and its internal poll counter stays 0)
+            polls = nsync - nviol
             rec = CommRecord(
                 model_up=nsync,          # violators push + coordinator polls
                 model_down=nsync,        # partial average pushed back to B

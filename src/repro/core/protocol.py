@@ -92,6 +92,7 @@ class DecentralizedLearner:
         self.rounds = 0
 
         self._step = jax.jit(self._make_step())
+        self._chunk = jax.jit(self._make_chunk())
 
     # ------------------------------------------------------------------
     def _make_step(self):
@@ -114,6 +115,28 @@ class DecentralizedLearner:
 
         return step
 
+    def _make_chunk(self):
+        """n rounds as ONE compiled program: jax.lax.scan over the round
+        axis, carry = (params, opt_state, sync_state), stacked per-round
+        ``ProtocolMetrics`` as the scan output. Dispatch (and the host
+        sync on counters) happens once per chunk instead of once per round,
+        which is where the per-round Python loop spent nearly all of its
+        wall-clock at simulator scale."""
+        step = self._make_step()
+
+        def chunk(params, opt_state, sync_state, batches):
+            def body(carry, batch):
+                params, opt_state, sync_state = carry
+                params, opt_state, sync_state, metrics = step(
+                    params, opt_state, sync_state, batch)
+                return (params, opt_state, sync_state), metrics
+
+            (params, opt_state, sync_state), metrics = jax.lax.scan(
+                body, (params, opt_state, sync_state), batches)
+            return params, opt_state, sync_state, metrics
+
+        return chunk
+
     # ------------------------------------------------------------------
     def step(self, batches) -> ProtocolMetrics:
         """One round. ``batches``: pytree with leading (m, B, ...) leaves."""
@@ -128,14 +151,44 @@ class DecentralizedLearner:
         return metrics
 
     # ------------------------------------------------------------------
-    def comm_bytes(self, msg_bytes: int = 64) -> int:
-        """Cumulative communication in bytes (paper's c(f) accounting)."""
+    def run_chunk(self, batches) -> ProtocolMetrics:
+        """n rounds in one compiled program (the scanned dual of ``step``).
+
+        ``batches``: pytree with leading (n, m, B, ...) leaves — round t of
+        the chunk is ``batches[t]``. Returns stacked ``ProtocolMetrics``
+        whose leaves carry the round axis: ``loss_per_learner`` is (n, m),
+        every ``CommRecord`` field is (n,). Host-side cumulative counters
+        are folded in once per chunk; protocol numerics are identical to n
+        calls of ``step`` (same traced round function), so comm counters
+        match bitwise and losses to float32 summation order.
+
+        jit recompiles per distinct chunk length n — drive it with a fixed
+        chunk size (plus at most one remainder) as ``train.loop`` does.
+        """
+        n = int(jax.tree.leaves(batches)[0].shape[0])
+        self.params, self.opt_state, self.sync_state, metrics = self._chunk(
+            self.params, self.opt_state, self.sync_state, batches)
+        self.rounds += n
+        self.cumulative_loss += float(jnp.sum(metrics.loss_per_learner))
+        self.cumulative_loss_per_learner = (
+            self.cumulative_loss_per_learner
+            + jnp.sum(metrics.loss_per_learner, axis=0))
+        for k in ops.CommRecord._fields:
+            self.comm_totals[k] += int(jnp.sum(getattr(metrics.comm, k)))
+        return metrics
+
+    # ------------------------------------------------------------------
+    def comm_bytes_of(self, totals, msg_bytes: int = 64) -> int:
+        """Bytes for a comm-counter dict (paper's c(f) accounting)."""
         model_bytes = self.model_size * self.protocol.bytes_per_param
         return (
-            (self.comm_totals["model_up"] + self.comm_totals["model_down"])
-            * model_bytes
-            + self.comm_totals["messages"] * msg_bytes
+            (totals["model_up"] + totals["model_down"]) * model_bytes
+            + totals["messages"] * msg_bytes
         )
+
+    def comm_bytes(self, msg_bytes: int = 64) -> int:
+        """Cumulative communication in bytes (paper's c(f) accounting)."""
+        return self.comm_bytes_of(self.comm_totals, msg_bytes)
 
     def mean_model(self):
         from repro.core.divergence import tree_mean

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.config import ProtocolConfig, TrainConfig
 from repro.optim import make_optimizer
 
@@ -95,7 +96,7 @@ def make_shardmap_dynamic_step(
 
     m_spec = P(axis)
     rep = P(axis)  # ref/scalars are carried learner-stacked for simplicity
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(m_spec, m_spec, m_spec, m_spec, m_spec, m_spec),
         out_specs=(m_spec, m_spec, m_spec, m_spec, m_spec, m_spec),

@@ -17,6 +17,18 @@
 All sources are deterministic given a seed, support per-learner streams
 (learner i gets an independent slice of the distribution) and a shared
 underlying concept so data is iid across learners (the paper's assumption).
+
+Each source also exposes the pure-function sampling protocol used by the
+scanned round driver (``LearnerStreams.next_chunk``):
+
+    concept()                     -> pytree of arrays defining the current
+                                     generating distribution (changes on
+                                     drift, stable shape/dtype)
+    sample_from(concept, key, B)  -> batch; pure jax function of its inputs
+
+``sample(key, B)`` == ``sample_from(concept(), key, B)``. Because drift
+only changes the *values* of the concept pytree, a jitted sampler keyed on
+shapes never retraces across drifts.
 """
 from __future__ import annotations
 
@@ -42,15 +54,22 @@ class SyntheticMNIST:
         basis = np.stack([np.sin((i + 1) * t / 2) for i in range(4)])  # (4,S)
         self.templates = np.einsum("cij,ih,jw->chw", freqs, basis, basis)
         self.templates /= np.abs(self.templates).max(axis=(1, 2), keepdims=True)
+        self._templates_dev = jnp.asarray(self.templates, jnp.float32)
 
-    def sample(self, key, batch: int):
+    def concept(self):
+        return self._templates_dev
+
+    def sample_from(self, concept, key, batch: int):
         k1, k2, k3, k4 = jax.random.split(key, 4)
         labels = jax.random.randint(k1, (batch,), 0, self.num_classes)
-        temps = jnp.asarray(self.templates, jnp.float32)[labels]       # (B,H,W)
+        temps = concept[labels]                                        # (B,H,W)
         shift = jax.random.randint(k2, (batch, 2), -2, 3)
         temps = jax.vmap(lambda img, s: jnp.roll(img, s, axis=(0, 1)))(temps, shift)
         imgs = temps + self.noise * jax.random.normal(k3, temps.shape)
         return {"x": imgs[..., None], "y": labels}
+
+    def sample(self, key, batch: int):
+        return self.sample_from(self.concept(), key, batch)
 
 
 class GraphicalModelStream:
@@ -84,12 +103,19 @@ class GraphicalModelStream:
         self._resample()
         self.drift_count += 1
 
-    def sample(self, key, batch: int):
+    def concept(self):
+        return (self.W, self.w)
+
+    def sample_from(self, concept, key, batch: int):
+        W, w = concept
         k1, k2 = jax.random.split(key)
         h = jax.random.normal(k1, (batch, self.k))
-        x = h @ self.W.T + 0.1 * jax.random.normal(k2, (batch, self.d))
-        y = (h @ self.w > 0).astype(jnp.int32)
+        x = h @ W.T + 0.1 * jax.random.normal(k2, (batch, self.d))
+        y = (h @ w > 0).astype(jnp.int32)
         return {"x": x, "y": y}
+
+    def sample(self, key, batch: int):
+        return self.sample_from(self.concept(), key, batch)
 
 
 class TokenStream:
@@ -108,13 +134,16 @@ class TokenStream:
     def force_drift(self):
         self._resample()
 
-    def sample(self, key, batch: int, seq_len: int):
+    def concept(self):
+        return self.logits
+
+    def sample_from(self, concept, key, batch: int, seq_len: int):
         def chain(k):
             k0, k = jax.random.split(k)
             first = jax.random.randint(k0, (), 0, self.vocab)
 
             def step(tok, kk):
-                nxt = jax.random.categorical(kk, self.logits[tok])
+                nxt = jax.random.categorical(kk, concept[tok])
                 return nxt, nxt
 
             _, toks = jax.lax.scan(step, first, jax.random.split(k, seq_len))
@@ -123,6 +152,9 @@ class TokenStream:
         keys = jax.random.split(key, batch)
         tokens, labels = jax.vmap(chain)(keys)
         return {"tokens": tokens, "labels": labels}
+
+    def sample(self, key, batch: int, seq_len: int):
+        return self.sample_from(self.concept(), key, batch, seq_len)
 
 
 class DeepDriveStream:
@@ -143,9 +175,12 @@ class DeepDriveStream:
     def force_drift(self):
         self.curvature_scale = float(self._rng.uniform(0.5, 2.0))
 
-    def sample(self, key, batch: int):
+    def concept(self):
+        return jnp.float32(self.curvature_scale)
+
+    def sample_from(self, concept, key, batch: int):
         k1, k2, k3 = jax.random.split(key, 3)
-        curv = self.curvature_scale * jax.random.normal(k1, (batch,)) * 0.3
+        curv = concept * jax.random.normal(k1, (batch,)) * 0.3
         offset = jax.random.normal(k2, (batch,)) * 0.2
         ys = jnp.linspace(1.0, 0.0, self.h)                   # depth rows
         xs = jnp.linspace(-1.0, 1.0, self.w)
@@ -161,3 +196,6 @@ class DeepDriveStream:
         rgb = jnp.stack([imgs, imgs * 0.8, imgs * 0.6], axis=-1)
         steering = -2.0 * curv - 0.5 * offset                 # steer against curve
         return {"x": rgb, "y": steering}
+
+    def sample(self, key, batch: int):
+        return self.sample_from(self.concept(), key, batch)

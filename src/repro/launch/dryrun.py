@@ -57,7 +57,8 @@ def _compile(cfg, shape, mesh, mode):
 
 
 def _costs(compiled, mesh) -> tuple:
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis
+    ca = cost_analysis(compiled)
     stats = __import__("repro.analysis.hlo", fromlist=["hlo"]).parse_collectives(
         compiled.as_text(), mesh.size)
     return (float(ca.get("flops", 0.0)),

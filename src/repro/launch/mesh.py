@@ -4,23 +4,24 @@
 importing this module never touches jax device state. The dry-run entry
 point sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before
 any jax import; everything else sees the real (single) CPU device.
+
+Mesh construction goes through ``repro.compat`` so the ``axis_types``
+request degrades gracefully on jax releases without ``AxisType``.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires forced host device count)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants (per chip) — roofline denominators.

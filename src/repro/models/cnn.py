@@ -25,7 +25,11 @@ from repro.models.layers import dense_init
 
 
 def _conv_init(key, k: int, c_in: int, c_out: int, dtype):
-    lim = math.sqrt(6.0 / (k * k * c_in + c_out))
+    # Glorot-uniform with the CONV fans: fan_in = k*k*c_in receptive-field
+    # inputs, fan_out = k*k*c_out (each weight feeds k*k output taps). The
+    # earlier k*k*c_in + c_out denominator under-counted fan_out and
+    # over-scaled every conv layer.
+    lim = math.sqrt(6.0 / (k * k * (c_in + c_out)))
     w = jax.random.uniform(key, (k, k, c_in, c_out), dtype, -lim, lim)
     return {"w": w, "b": jnp.zeros((c_out,), dtype)}
 

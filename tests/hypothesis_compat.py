@@ -1,0 +1,37 @@
+"""Optional-`hypothesis` shim for the property-based test modules.
+
+``from hypothesis_compat import given, settings, st`` behaves exactly like
+the real ``hypothesis`` import when the package is installed (pinned in
+requirements-dev.txt). When it is missing, the decorators become stubs that
+replace each property-based test with a ``pytest.skip`` — so collection
+never errors and every non-property test in the module still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def _skipping_decorator(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not mistake the property
+            # arguments (m=..., seed=...) for fixtures
+            def wrapper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            wrapper.__name__ = getattr(fn, "__name__", "property_test")
+            wrapper.__doc__ = getattr(fn, "__doc__", None)
+            return wrapper
+        return deco
+
+    given = _skipping_decorator
+    settings = _skipping_decorator
+
+    class _AnyStrategy:
+        """Accepts any ``st.<strategy>(...)`` call the tests make."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

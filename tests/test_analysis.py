@@ -69,9 +69,10 @@ def test_count_op():
 # ---------------------------------------------------------------------------
 
 def _mesh(multi=False):
+    from repro.compat import abstract_mesh
     shape = (2, 16, 16) if multi else (16, 16)
     axes = ("pod", "data", "model") if multi else ("data", "model")
-    return jax.sharding.AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 def test_param_specs_basic():

@@ -26,12 +26,12 @@ def test_tiny_mesh_train_and_dynamic_lower():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import dataclasses, json
         import jax
+        from repro.compat import make_mesh
         from repro.config import ShapeConfig, get_arch
         from repro.launch.specs import build_program
         from repro.analysis.hlo import parse_collectives
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_arch("llama3-8b", smoke=True)
         shape = ShapeConfig("tiny", seq_len=64, global_batch=8, kind="train")
         out = {}
@@ -59,11 +59,11 @@ def test_tiny_mesh_decode_and_prefill_lower():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax
+        from repro.compat import make_mesh
         from repro.config import ShapeConfig, get_arch
         from repro.launch.specs import build_program
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         for arch in ("llama3-8b", "mamba2-2.7b", "deepseek-v2-236b"):
             cfg = get_arch(arch, smoke=True)
             for kind, shape in [
@@ -91,13 +91,13 @@ def test_dynamic_step_executes_and_syncs_on_tiny_mesh():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.config import ProtocolConfig, TrainConfig, get_arch
         from repro.core.distributed import (
             init_dynamic_state, make_dynamic_train_step)
         from repro.models.model import init_lm_params, lm_loss
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_arch("llama3-8b", smoke=True)
         m = 2
         loss_fn = lambda p, b: lm_loss(cfg, p, b)
@@ -134,6 +134,7 @@ def test_shardmap_protocol_matches_gspmd_path():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh
         from repro.config import ProtocolConfig, TrainConfig, get_arch
         from repro.core.shardmap_protocol import (
             init_shardmap_state, make_shardmap_dynamic_step)
@@ -142,8 +143,7 @@ def test_shardmap_protocol_matches_gspmd_path():
         from repro.models.cnn import cnn_loss, init_cnn_params
         from repro.data.synthetic import SyntheticMNIST
 
-        mesh = jax.make_mesh((4,), ("learner",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("learner",))
         cfg = get_arch("mnist_cnn", smoke=True)
         loss_fn = lambda p, b: cnn_loss(cfg, p, b)
         train = TrainConfig(optimizer="sgd", learning_rate=0.3)

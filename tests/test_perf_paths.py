@@ -71,8 +71,9 @@ def test_moe_gather_dispatch_equals_einsum():
 def test_expert_parallel_param_specs():
     """E divisible by tp -> expert-parallel layout; otherwise dense."""
     from jax.sharding import PartitionSpec as P
+    from repro.compat import abstract_mesh
     from repro.launch import sharding as shd
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     axes = shd.default_axes_map(False)
     params = {"blocks": {"moe": {
         "w_gate": jax.ShapeDtypeStruct((60, 160, 5120, 1536), jnp.bfloat16),

@@ -54,7 +54,20 @@ def test_dynamic_beats_periodic_comm_similar_loss():
 
 
 def test_drift_triggers_communication_burst():
-    """Fig. 5.4(b): dynamic averaging communicates right after a drift."""
+    """Fig. 5.4(b): dynamic averaging concentrates COMMUNICATION right
+    after a drift.
+
+    The paper's claim is about communication volume, not sync-event
+    counts: in a calm converged fleet the reference model r goes stale
+    (it only refreshes on full syncs), so SGD noise produces a steady
+    trickle of CHEAP partial averages — 1-3 models moved per event. A
+    drift instead moves every learner coherently away from r, balancing
+    escalates to B = [m], and the protocol pays full synchronizations
+    (m models up + m down, plus a reference reset). Sync-event counts
+    can therefore TIE or even favour calm (the post-drift reference
+    resets suppress follow-up violations); model transfers separate the
+    regimes robustly (measured over seeds 0-3: calm 4-8 transfers vs
+    burst 17-19, with >= 2 full syncs after every drift)."""
     loss_fn, init_fn = _mlp_setup()
     src = GraphicalModelStream(seed=0, drift_prob=0.0)
     streams = LearnerStreams(src, 6, batch=10, seed=0)
@@ -63,19 +76,18 @@ def test_drift_triggers_communication_burst():
         ProtocolConfig(kind="dynamic", b=2, delta=0.5),
         TrainConfig(optimizer="sgd", learning_rate=0.1))
     # converge first
-    for _ in range(100):
-        dl.step(streams.next())
-    before = dl.comm_totals["syncs"]
-    for _ in range(24):
-        dl.step(streams.next())
-    calm = dl.comm_totals["syncs"] - before
+    dl.run_chunk(streams.next_chunk(100))
+    before = dict(dl.comm_totals)
+    dl.run_chunk(streams.next_chunk(24))
+    calm_up = dl.comm_totals["model_up"] - before["model_up"]
     src.force_drift()
-    before = dl.comm_totals["syncs"]
-    for _ in range(24):
-        dl.step(streams.next())
-    burst = dl.comm_totals["syncs"] - before
-    assert burst >= calm
-    assert burst >= 1
+    before = dict(dl.comm_totals)
+    dl.run_chunk(streams.next_chunk(24))
+    burst_up = dl.comm_totals["model_up"] - before["model_up"]
+    burst_full = dl.comm_totals["full_syncs"] - before["full_syncs"]
+    assert burst_up > calm_up
+    assert burst_full >= 1           # the drift forced a reference reset
+    assert dl.comm_totals["syncs"] - before["syncs"] >= 1
 
 
 def test_heterogeneous_init_increases_divergence():

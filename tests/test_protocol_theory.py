@@ -106,10 +106,16 @@ def test_dynamic_comm_bounded_by_periodic_same_b():
 
 
 def test_serial_learner_learns():
+    # lr calibrated against measured curves (SGD verified exact vs a NumPy
+    # reference; conv init is true Glorot). On this 14x14 task, mean loss
+    # over steps 50-60 / steps 0-10 after 60 steps:
+    #   lr=0.1 -> 0.61   (plateaus near the 0.5 bar; the seed's flake)
+    #   lr=0.2 -> 0.32   (chosen: passes with ~35% margin)
+    #   lr=0.3 -> 0.22   (faster but nearer the divergence edge)
     cfg, loss_fn, init_fn = _cnn_setup()
     src = SyntheticMNIST(seed=0, image_size=14)
     sl = SerialLearner(loss_fn, init_fn,
-                       TrainConfig(optimizer="sgd", learning_rate=0.1))
+                       TrainConfig(optimizer="sgd", learning_rate=0.2))
     key = jax.random.PRNGKey(0)
     losses = []
     for t in range(60):
