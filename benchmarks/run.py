@@ -1,10 +1,12 @@
 """Benchmark orchestrator: one benchmark per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--list]
 
 Prints one CSV block per benchmark plus a summary line
 ``name,seconds,claim_check`` and persists per-benchmark JSON under
-experiments/bench/.
+experiments/bench/. ``--list`` enumerates the registered benchmarks
+(name + paper reference) without running anything — the registry contract
+CI and humans can check cheaply.
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ from benchmarks import (
     fig6_2_init_heterogeneity,
     figA6_optimizers,
     figC_unbalanced,
+    fig_network_regimes,
     kernel_bench,
     roofline_table,
     scan_driver,
@@ -38,6 +41,7 @@ ALL = [
     fig6_2_init_heterogeneity,
     figA6_optimizers,
     figC_unbalanced,
+    fig_network_regimes,
     kernel_bench,
     roofline_table,
 ]
@@ -48,7 +52,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale rounds (slow)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="enumerate registered benchmarks and exit")
     args = ap.parse_args()
+
+    if args.list:
+        for mod in ALL:
+            print(f"{mod.NAME}\t{mod.PAPER_REF}")
+        return
 
     summary = []
     for mod in ALL:

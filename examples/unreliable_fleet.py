@@ -1,0 +1,75 @@
+"""An unreliable fleet: dynamic averaging when the network fights back.
+
+The paper motivates dynamic averaging with fleets of cars and phones —
+devices that drop off the network, straggle, and pay real bandwidth for
+every model they move. This walkthrough puts ten learners on exactly that
+network (``NetworkConfig``):
+
+* 60% per-round availability, with three stragglers at 30%
+* a random-geometric peer overlay that re-draws every 20 rounds (mobility)
+* mixed wifi/lte links, so a synchronization's wall-clock is set by the
+  slowest participating link
+
+and compares three protocols end to end — periodic averaging (pays full
+fleet syncs), dynamic averaging (pays only on divergence violations), and
+gossip (no coordinator at all, averages over the mobile overlay). All
+rounds run through the scanned engine: availability masks, mobility
+re-draws and link costs are sampled inside ``lax.scan``, one compiled
+program per chunk.
+
+    PYTHONPATH=src python examples/unreliable_fleet.py
+"""
+import jax
+
+from repro.config import NetworkConfig, ProtocolConfig, TrainConfig, get_arch
+from repro.data.synthetic import SyntheticMNIST
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn_params
+from repro.train.loop import run_protocol_training
+
+FLEET = NetworkConfig(
+    topology="geometric", geo_radius=0.6, redraw_every=20,
+    act_prob=0.6, straggler_frac=0.3, straggler_act_prob=0.3,
+    link_classes=("wifi", "lte"),
+)
+
+
+def main():
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+    src = SyntheticMNIST(seed=0, image_size=14)
+
+    print(f"fleet: m=10, act_prob={FLEET.act_prob}, "
+          f"{FLEET.straggler_frac:.0%} stragglers, "
+          f"topology={FLEET.topology} (re-drawn every "
+          f"{FLEET.redraw_every} rounds), links={FLEET.link_classes}\n")
+
+    for name, proto in [
+        ("periodic b=10", ProtocolConfig(kind="periodic", b=10)),
+        ("dynamic Δ=0.7", ProtocolConfig(kind="dynamic", b=10, delta=0.7)),
+        ("gossip  b=10", ProtocolConfig(kind="gossip", b=10)),
+    ]:
+        dl, _ = run_protocol_training(
+            loss_fn, init_fn, src, m=10, rounds=150, protocol=proto,
+            train=TrainConfig(optimizer="sgd", learning_rate=0.1),
+            batch=10, seed=0, network=FLEET)
+        test = src.sample(jax.random.PRNGKey(999), 512)
+        acc = float(cnn_accuracy(cfg, dl.mean_model(), test))
+        busiest = int(dl.per_link_bytes().argmax())
+        print(f"{name:14s} loss={dl.cumulative_loss:9.1f} "
+              f"comm={dl.comm_bytes() / 1e6:7.1f}MB "
+              f"net_time={dl.network_time:7.2f}s "
+              f"reachable={dl.mean_active():.0%} "
+              f"accuracy={acc:.3f} "
+              f"busiest_link=#{busiest} "
+              f"({dl.per_link_bytes()[busiest] / 1e6:.1f}MB)")
+
+    print("\ndynamic averaging keeps its communication advantage under "
+          "dropout: violations simply wait for the violator to come back "
+          "in reach, while periodic pays for every reachable learner every "
+          "b rounds; gossip needs no coordinator but its mixing (and its "
+          "bytes) track the mobile overlay's density.")
+
+
+if __name__ == "__main__":
+    main()

@@ -251,6 +251,7 @@ PROTO_PERIODIC = "periodic"
 PROTO_CONTINUOUS = "continuous"
 PROTO_FEDAVG = "fedavg"
 PROTO_DYNAMIC = "dynamic"
+PROTO_GOSSIP = "gossip"
 
 
 @dataclass(frozen=True)
@@ -260,7 +261,9 @@ class ProtocolConfig:
     ``kind`` selects the operator σ; ``b`` is the check/sync period in local
     steps; ``delta`` the divergence threshold Δ for σ_Δ; ``fedavg_c`` the
     subsampled fraction C for FedAvg; ``augmentation`` selects the
-    coordinator's balancing strategy for dynamic averaging.
+    coordinator's balancing strategy for dynamic averaging. ``gossip`` is
+    the coordinator-free baseline: neighborhood averaging over the network
+    topology (``NetworkConfig``) every ``b`` rounds.
     """
     kind: str = PROTO_DYNAMIC
     b: int = 10
@@ -273,10 +276,99 @@ class ProtocolConfig:
     def __post_init__(self):
         assert self.kind in (
             PROTO_NOSYNC, PROTO_PERIODIC, PROTO_CONTINUOUS,
-            PROTO_FEDAVG, PROTO_DYNAMIC,
+            PROTO_FEDAVG, PROTO_DYNAMIC, PROTO_GOSSIP,
         ), self.kind
         assert self.b >= 1
-        assert self.delta > 0
+        assert 0.0 < self.fedavg_c <= 1.0, self.fedavg_c
+        # delta is only read by sigma_Delta; a nosync/periodic config must
+        # not be rejected over a field it never uses
+        if self.kind == PROTO_DYNAMIC:
+            assert self.delta > 0
+
+
+# ---------------------------------------------------------------------------
+# Network environment (topology, availability, link costs)
+# ---------------------------------------------------------------------------
+
+TOPO_STAR = "star"
+TOPO_RING = "ring"
+TOPO_TORUS = "torus"
+TOPO_ERDOS_RENYI = "erdos_renyi"
+TOPO_GEOMETRIC = "geometric"
+
+TOPOLOGIES = (
+    TOPO_STAR, TOPO_RING, TOPO_TORUS, TOPO_ERDOS_RENYI, TOPO_GEOMETRIC,
+)
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    """Simulated network environment for a fleet of learners.
+
+    Three orthogonal aspects (see ``repro.network``):
+
+    * **topology** — the peer overlay as an (m, m) symmetric adjacency
+      matrix: ``star`` | ``ring`` | ``torus`` | ``erdos_renyi`` |
+      ``geometric``. ``geometric`` with ``redraw_every=k`` models mobility:
+      node positions (hence edges) are re-drawn every k rounds, as a pure
+      function of ``(seed, t)`` so it evaluates inside ``lax.scan``.
+      Coordinator operators (periodic/fedavg/dynamic) talk over
+      learner↔coordinator uplinks and are constrained by *availability*
+      only; the overlay governs the coordinator-free ``gossip`` operator.
+    * **availability** — per-round (m,) active masks: i.i.d. Bernoulli
+      ``act_prob`` dropout, a ``straggler_frac`` subset with its own lower
+      ``straggler_act_prob``, and scheduled outages (every ``outage_every``
+      rounds a random ``outage_frac`` of the fleet goes dark for
+      ``outage_length`` rounds). Unavailable learners keep training
+      locally but neither violate, get polled, nor receive averages.
+    * **link costs** — per-learner bandwidth/latency classes
+      (``repro.network.cost.LINK_CLASSES``) assigned round-robin from
+      ``link_classes``; model transfers convert to simulated per-round
+      wall-clock and per-link bytes.
+    """
+    topology: str = TOPO_STAR
+    er_p: float = 0.3                    # Erdős–Rényi edge probability
+    geo_radius: float = 0.5              # geometric connection radius in [0,1]^2
+    redraw_every: int = 0                # >0: re-draw geometric graph every k rounds
+    act_prob: float = 1.0                # Bernoulli availability per learner/round
+    straggler_frac: float = 0.0          # fraction of learners that straggle
+    straggler_act_prob: float = 0.5      # their (lower) availability
+    outage_every: int = 0                # 0 = no scheduled outages
+    outage_length: int = 1               # rounds an outage lasts
+    outage_frac: float = 0.25            # fraction of fleet taken down
+    link_classes: Tuple[str, ...] = ("wired",)
+    msg_bytes: int = 64                  # control-message size for time accounting
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.topology in TOPOLOGIES, self.topology
+        assert 0.0 <= self.er_p <= 1.0
+        assert self.geo_radius > 0.0
+        assert self.redraw_every >= 0
+        # mobility is a property of the geometric graph (positions move);
+        # reject the combo instead of silently keeping other overlays static
+        assert self.redraw_every == 0 or self.topology == TOPO_GEOMETRIC, (
+            f"redraw_every only applies to topology='geometric', "
+            f"got {self.topology!r}")
+        assert 0.0 < self.act_prob <= 1.0
+        assert 0.0 <= self.straggler_frac <= 1.0
+        assert 0.0 < self.straggler_act_prob <= 1.0
+        assert self.outage_every >= 0
+        assert self.outage_length >= 1
+        # an outage longer than its period is a permanent blackout, not a
+        # scheduled one — reject rather than silently darken the fleet
+        assert (self.outage_every == 0
+                or self.outage_length <= self.outage_every), (
+            self.outage_length, self.outage_every)
+        assert 0.0 <= self.outage_frac <= 1.0
+        assert len(self.link_classes) >= 1
+
+    @property
+    def full_availability(self) -> bool:
+        """True when every learner is reachable every round (the engine
+        then skips mask sampling entirely — the pre-network fast path)."""
+        return (self.act_prob >= 1.0 and self.straggler_frac == 0.0
+                and self.outage_every == 0)
 
 
 # ---------------------------------------------------------------------------
@@ -305,6 +397,7 @@ class RunConfig:
     protocol: ProtocolConfig = ProtocolConfig()
     train: TrainConfig = TrainConfig()
     num_learners: int = 1                  # m; learner axis for dynamic mode
+    network: Optional[NetworkConfig] = None  # None = ideal always-on star
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

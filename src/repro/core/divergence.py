@@ -30,12 +30,19 @@ def tree_mean(stacked):
 
 
 def tree_weighted_mean(stacked, weights):
-    """Weighted mean over the learner axis (Algorithm 2). weights: (m,)."""
+    """Weighted mean over the learner axis (Algorithm 2). weights: (m,).
+
+    An all-zero weight vector (an empty active set under availability
+    masking) yields the zero model instead of 0/0 = NaN — the operators'
+    selection masks then keep the previous configuration unchanged, so no
+    NaN ever reaches the scan carry.
+    """
     wsum = jnp.sum(weights)
+    denom = jnp.where(wsum > 0, wsum, jnp.ones_like(wsum))
 
     def wmean(x):
         w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-        return jnp.sum(x * w, axis=0) / wsum.astype(x.dtype)
+        return jnp.sum(x * w, axis=0) / denom.astype(x.dtype)
 
     return jax.tree.map(wmean, stacked)
 

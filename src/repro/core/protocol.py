@@ -12,6 +12,14 @@ shards over devices).
 
 Communication is accounted exactly: model transfers and scalar messages as
 integers, converted to bytes in ``comm_bytes``.
+
+With a ``NetworkConfig`` the round runs inside a simulated network
+environment (``repro.network``): per-round availability masks are sampled
+inside the scanned round (pure in the round counter — no host sync), the
+operators become availability-aware, and the link-cost model turns each
+round's transfers into simulated wall-clock (``net_time``) and per-link
+bytes. ``network=None`` is the ideal always-on star and reproduces the
+pre-network engine bitwise.
 """
 from __future__ import annotations
 
@@ -20,10 +28,14 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.config import ProtocolConfig, TrainConfig
+from repro.config import NetworkConfig, ProtocolConfig, TrainConfig
 from repro.core import operators as ops
 from repro.core.divergence import divergence, flat_size
+from repro.network import availability as net_availability
+from repro.network import cost as net_cost
+from repro.network import topology as net_topology
 from repro.optim import make_optimizer
 
 
@@ -31,6 +43,9 @@ class ProtocolMetrics(NamedTuple):
     loss_per_learner: jnp.ndarray    # (m,) this-round in-place loss
     comm: ops.CommRecord
     divergence: jnp.ndarray
+    num_active: jnp.ndarray          # scalar int32 — reachable learners
+    net_time: jnp.ndarray            # scalar float32 — simulated seconds
+    link_xfers: jnp.ndarray          # (m,) int32 — models per learner link
 
 
 class DecentralizedLearner:
@@ -47,6 +62,7 @@ class DecentralizedLearner:
         init_heterogeneity: float = 0.0,
         sample_weights: Optional[jnp.ndarray] = None,
         track_divergence: bool = False,
+        network: Optional[NetworkConfig] = None,
     ):
         self.m = m
         self.protocol = protocol
@@ -54,6 +70,7 @@ class DecentralizedLearner:
         self.loss_fn = loss_fn
         self.opt = make_optimizer(train)
         self.track_divergence = track_divergence
+        self.network = network
         key = jax.random.PRNGKey(seed)
         k_init, k_noise, k_state = jax.random.split(key, 3)
 
@@ -84,12 +101,32 @@ class DecentralizedLearner:
         self.sync_state = ops.init_state(base, seed)
         self.sample_weights = sample_weights
         self.model_size = flat_size(base)
+        self.model_bytes = self.model_size * protocol.bytes_per_param
+
+        # network environment: link profile + peer overlay. A static
+        # topology is built once here (concrete matrix closed over by the
+        # jitted round); a mobile one is re-derived per scanned round from
+        # the round counter. The gossip operator needs SOME overlay — an
+        # ideal network means the implied star.
+        self._link_bw = self._link_lat = None
+        self._static_adj = None
+        self._mobile = False
+        if network is not None:
+            self._link_bw, self._link_lat = net_cost.link_profile(network, m)
+            self._mobile = net_topology.is_mobile(network)
+            if not self._mobile:
+                self._static_adj = net_topology.adjacency(network, m)
+        elif protocol.kind == "gossip":
+            self._static_adj = net_topology.star(m)
 
         # cumulative counters (host-side python ints / floats)
         self.cumulative_loss = 0.0
         self.cumulative_loss_per_learner = jnp.zeros((m,))
         self.comm_totals = {k: 0 for k in ops.CommRecord._fields}
         self.rounds = 0
+        self.network_time = 0.0                    # simulated seconds
+        self.active_rounds_total = 0               # sum of per-round |active|
+        self.link_xfer_totals = np.zeros((m,), np.int64)
 
         self._step = jax.jit(self._make_step())
         self._chunk = jax.jit(self._make_chunk())
@@ -99,6 +136,13 @@ class DecentralizedLearner:
         loss_fn, opt = self.loss_fn, self.opt
         proto, weights = self.protocol, self.sample_weights
         track_div = self.track_divergence
+        m, net = self.m, self.network
+        model_bytes = self.model_bytes
+        static_adj, mobile = self._static_adj, self._mobile
+        bw, lat = self._link_bw, self._link_lat
+        # full availability needs no mask at all — the operators then follow
+        # the pre-network code path, bitwise
+        sample_masks = net is not None and not net.full_availability
 
         def local_update(params, opt_state, batch):
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
@@ -106,12 +150,29 @@ class DecentralizedLearner:
             return params, opt_state, loss
 
         def step(params, opt_state, sync_state, batches):
+            # availability means REACHABILITY: every learner still takes its
+            # local SGD step; unavailable ones just cannot communicate
             params, opt_state, losses = jax.vmap(local_update)(
                 params, opt_state, batches)
-            params, sync_state, rec = ops.apply_operator(
-                proto, params, sync_state, weights)
+            t = sync_state.step                       # this round's index
+            active = (net_availability.sample(net, m, t)
+                      if sample_masks else None)
+            adj = (net_topology.adjacency(net, m, t) if mobile
+                   else static_adj)
+            params, sync_state, rec, xfers = ops.apply_operator(
+                proto, params, sync_state, weights, active=active,
+                adjacency=adj)
             div = divergence(params) if track_div else jnp.zeros(())
-            return params, opt_state, sync_state, ProtocolMetrics(losses, rec, div)
+            num_active = (jnp.sum(active).astype(jnp.int32)
+                          if active is not None else jnp.int32(m))
+            if net is not None:
+                act = active if active is not None else jnp.ones((m,), bool)
+                net_time = net_cost.round_network_time(
+                    xfers, act, rec.messages, model_bytes, bw, lat)
+            else:
+                net_time = jnp.float32(0.0)
+            return params, opt_state, sync_state, ProtocolMetrics(
+                losses, rec, div, num_active, net_time, xfers)
 
         return step
 
@@ -148,6 +209,9 @@ class DecentralizedLearner:
             self.cumulative_loss_per_learner + metrics.loss_per_learner)
         for k in ops.CommRecord._fields:
             self.comm_totals[k] += int(getattr(metrics.comm, k))
+        self.network_time += float(metrics.net_time)
+        self.active_rounds_total += int(metrics.num_active)
+        self.link_xfer_totals += np.asarray(metrics.link_xfers, np.int64)
         return metrics
 
     # ------------------------------------------------------------------
@@ -175,20 +239,39 @@ class DecentralizedLearner:
             + jnp.sum(metrics.loss_per_learner, axis=0))
         for k in ops.CommRecord._fields:
             self.comm_totals[k] += int(jnp.sum(getattr(metrics.comm, k)))
+        self.network_time += float(jnp.sum(metrics.net_time))
+        self.active_rounds_total += int(jnp.sum(metrics.num_active))
+        self.link_xfer_totals += np.asarray(
+            jnp.sum(metrics.link_xfers, axis=0), np.int64)
         return metrics
 
     # ------------------------------------------------------------------
-    def comm_bytes_of(self, totals, msg_bytes: int = 64) -> int:
-        """Bytes for a comm-counter dict (paper's c(f) accounting)."""
-        model_bytes = self.model_size * self.protocol.bytes_per_param
+    def comm_bytes_of(self, totals, msg_bytes: Optional[int] = None) -> int:
+        """Bytes for a comm-counter dict (paper's c(f) accounting).
+        ``msg_bytes`` defaults to the configured ``NetworkConfig.msg_bytes``
+        (64 on an ideal network)."""
+        if msg_bytes is None:
+            msg_bytes = self.network.msg_bytes if self.network else 64
         return (
-            (totals["model_up"] + totals["model_down"]) * model_bytes
+            (totals["model_up"] + totals["model_down"]) * self.model_bytes
             + totals["messages"] * msg_bytes
         )
 
-    def comm_bytes(self, msg_bytes: int = 64) -> int:
+    def comm_bytes(self, msg_bytes: Optional[int] = None) -> int:
         """Cumulative communication in bytes (paper's c(f) accounting)."""
         return self.comm_bytes_of(self.comm_totals, msg_bytes)
+
+    def per_link_bytes(self) -> np.ndarray:
+        """(m,) cumulative model bytes each learner's link carried (the
+        per-link breakdown of ``comm_bytes``; control messages stay in the
+        global accounting)."""
+        return self.link_xfer_totals * self.model_bytes
+
+    def mean_active(self) -> float:
+        """Average fraction of the fleet reachable per executed round."""
+        if self.rounds == 0:
+            return 1.0
+        return self.active_rounds_total / (self.rounds * self.m)
 
     def mean_model(self):
         from repro.core.divergence import tree_mean

@@ -1,0 +1,55 @@
+"""Per-round learner availability masks, pure in ``(seed, t)``.
+
+``sample(net, m, t)`` returns the (m,) bool active mask for round ``t``,
+derived by folding the round counter into a PRNG key — no carried RNG
+state, so it runs inside ``lax.scan`` (``t`` may be traced) and the mask
+for a given round is reproducible in isolation.
+
+Three stacking failure modes (all off by default):
+
+* i.i.d. dropout   — each learner answers w.p. ``act_prob``
+  (FedAvg's partial client participation, McMahan et al. '17)
+* stragglers       — a fixed ``straggler_frac`` subset (chosen once from
+  ``seed``) answers with its own lower ``straggler_act_prob``
+* scheduled outage — every ``outage_every`` rounds a fresh random
+  ``outage_frac`` of the fleet goes dark for ``outage_length`` rounds
+  (cell tower handoff, depot Wi-Fi, nightly charging)
+
+Availability means *reachability*: an unavailable learner keeps taking
+local SGD steps but cannot communicate — it neither violates, nor is
+polled, nor receives the average that round.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import NetworkConfig
+
+
+def straggler_mask(net: NetworkConfig, m: int) -> jnp.ndarray:
+    """(m,) bool — the fixed subset of learners that straggle."""
+    n_strag = int(round(net.straggler_frac * m))
+    if n_strag == 0:
+        return jnp.zeros((m,), bool)
+    perm = jax.random.permutation(jax.random.PRNGKey(net.seed ^ 0x57AA), m)
+    return jnp.zeros((m,), bool).at[perm[:n_strag]].set(True)
+
+
+def sample(net: NetworkConfig, m: int, t) -> jnp.ndarray:
+    """(m,) bool active mask for round ``t`` (``t`` may be traced)."""
+    t = jnp.asarray(t, jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(net.seed ^ 0xAC71), t)
+    p = jnp.where(straggler_mask(net, m),
+                  net.straggler_act_prob, net.act_prob)
+    active = jax.random.uniform(key, (m,)) < p
+    if net.outage_every > 0:
+        window = t // net.outage_every
+        in_outage = (t % net.outage_every) < net.outage_length
+        okey = jax.random.fold_in(
+            jax.random.PRNGKey(net.seed ^ 0x0F0F), window)
+        n_down = int(round(net.outage_frac * m))
+        down = jnp.zeros((m,), bool).at[
+            jax.random.permutation(okey, m)[:n_down]].set(True)
+        active = active & ~(in_outage & down)
+    return active

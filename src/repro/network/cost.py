@@ -1,0 +1,67 @@
+"""Link-cost model: bandwidth/latency classes → simulated wall-clock.
+
+Units: bandwidth in **bytes/second**, latency in **seconds**; all returned
+times are seconds. Each learner owns one link (to the coordinator for
+periodic/fedavg/dynamic, to its peers for gossip), assigned a class from
+``NetworkConfig.link_classes`` round-robin over the learner index.
+
+The timing model is *parallel links*: within a round every participating
+link transfers concurrently, so the round's network time is the slowest
+link's ``transfers_i * (latency_i + model_bytes / bandwidth_i)``, plus one
+control-plane round-trip over the slowest ACTIVE link whenever scalar
+messages were exchanged (violation notices / poll requests). Per-link
+*bytes* are exact — ``transfers_i * model_bytes`` — and extend the paper's
+``comm_bytes`` accounting from a fleet total to a per-link breakdown.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.config import NetworkConfig
+
+
+class LinkClass(NamedTuple):
+    bandwidth: float     # bytes / second
+    latency: float       # seconds (one-way)
+
+
+# Nominal classes, deliberately coarse: the object of study is the regime
+# (orders of magnitude between tiers), not any one carrier's datasheet.
+LINK_CLASSES = {
+    "wired": LinkClass(bandwidth=125e6, latency=0.001),   # 1 Gb/s LAN
+    "wifi":  LinkClass(bandwidth=25e6,  latency=0.005),
+    "lte":   LinkClass(bandwidth=5e6,   latency=0.05),
+    "edge":  LinkClass(bandwidth=125e3, latency=0.2),     # 2G fallback
+}
+
+
+def link_profile(net: NetworkConfig, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-learner ``(bandwidth, latency)`` float32 arrays, classes from
+    ``net.link_classes`` assigned round-robin over the learner index."""
+    unknown = [c for c in net.link_classes if c not in LINK_CLASSES]
+    if unknown:
+        raise KeyError(
+            f"unknown link class(es) {unknown}; known: {sorted(LINK_CLASSES)}")
+    classes = [LINK_CLASSES[net.link_classes[i % len(net.link_classes)]]
+               for i in range(m)]
+    bw = jnp.asarray([c.bandwidth for c in classes], jnp.float32)
+    lat = jnp.asarray([c.latency for c in classes], jnp.float32)
+    return bw, lat
+
+
+def round_network_time(xfers, active, messages, model_bytes: int,
+                       bw, lat) -> jnp.ndarray:
+    """Simulated seconds one round of the protocol spends on the network.
+
+    ``xfers``: (m,) int32 models crossing each learner's link this round;
+    ``active``: (m,) bool reachability mask; ``messages``: scalar int32
+    control messages; ``bw``/``lat``: ``link_profile`` arrays.
+    """
+    per_link = xfers.astype(jnp.float32) * (
+        lat + jnp.float32(model_bytes) / bw)
+    t_models = jnp.max(per_link, initial=0.0)
+    slowest_active = jnp.max(jnp.where(active, lat, 0.0), initial=0.0)
+    t_msgs = jnp.where(messages > 0, 2.0 * slowest_active, 0.0)
+    return t_models + t_msgs

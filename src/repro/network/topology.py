@@ -1,0 +1,111 @@
+"""Communication topologies as (m, m) adjacency matrices (pure JAX).
+
+Every builder returns a symmetric bool matrix with a zero diagonal. The
+coordinator operators (periodic/fedavg/dynamic) communicate over
+learner↔coordinator uplinks and read the environment only through the
+availability mask; the adjacency matrix is the *peer overlay* consumed by
+the coordinator-free ``gossip`` operator and by the mobility model.
+
+``geometric`` supports mobility: with ``NetworkConfig.redraw_every = k``
+the node positions are re-drawn every k rounds, so the adjacency used in
+round ``t`` is a pure function of ``(seed, t)`` and evaluates inside
+``lax.scan`` with no per-round host sync. Static topologies ignore ``t``
+and the engine closes over one concrete matrix.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    NetworkConfig, TOPO_ERDOS_RENYI, TOPO_GEOMETRIC, TOPO_RING, TOPO_STAR,
+    TOPO_TORUS,
+)
+
+
+def _no_self(adj: jnp.ndarray) -> jnp.ndarray:
+    return adj & ~jnp.eye(adj.shape[0], dtype=bool)
+
+
+def star(m: int, hub: int = 0) -> jnp.ndarray:
+    """Hub-and-spokes: every learner peers with ``hub`` only."""
+    adj = jnp.zeros((m, m), bool)
+    adj = adj.at[hub, :].set(True).at[:, hub].set(True)
+    return _no_self(adj)
+
+
+def ring(m: int) -> jnp.ndarray:
+    """i ~ i±1 (mod m)."""
+    i = jnp.arange(m)
+    adj = jnp.zeros((m, m), bool)
+    adj = adj.at[i, (i + 1) % m].set(True)
+    adj = adj.at[i, (i - 1) % m].set(True)
+    return _no_self(adj)
+
+
+def complete(m: int) -> jnp.ndarray:
+    return _no_self(jnp.ones((m, m), bool))
+
+
+def _torus_sides(m: int) -> tuple:
+    a = max(1, int(math.isqrt(m)))
+    while m % a:
+        a -= 1
+    return a, m // a
+
+
+def torus(m: int) -> jnp.ndarray:
+    """2-d torus on the most-square a×b factorization of m (degenerates to
+    a ring when m is prime)."""
+    a, b = _torus_sides(m)
+    idx = jnp.arange(m).reshape(a, b)
+    adj = jnp.zeros((m, m), bool)
+    for shift, axis in ((1, 0), (-1, 0), (1, 1), (-1, 1)):
+        nbr = jnp.roll(idx, shift, axis)
+        adj = adj.at[idx.reshape(-1), nbr.reshape(-1)].set(True)
+    return _no_self(adj | adj.T)
+
+
+def erdos_renyi(key: jax.Array, m: int, p: float) -> jnp.ndarray:
+    """Each of the m(m-1)/2 undirected edges present i.i.d. w.p. ``p``."""
+    u = jax.random.uniform(key, (m, m))
+    upper = jnp.triu(u < p, k=1)
+    return _no_self(upper | upper.T)
+
+
+def random_geometric(key: jax.Array, m: int, radius: float) -> jnp.ndarray:
+    """Nodes uniform in [0,1]^2, edge iff Euclidean distance < radius."""
+    pos = jax.random.uniform(key, (m, 2))
+    d2 = jnp.sum(jnp.square(pos[:, None] - pos[None]), axis=-1)
+    return _no_self(d2 < radius * radius)
+
+
+def adjacency(net: NetworkConfig, m: int, t=None) -> jnp.ndarray:
+    """The (m, m) adjacency of ``net`` at round ``t``.
+
+    Static topologies ignore ``t`` and return a concrete matrix when called
+    outside jit. ``geometric`` with ``redraw_every > 0`` re-draws positions
+    every ``redraw_every`` rounds — pass the traced round counter to get
+    the mobile graph inside ``lax.scan``.
+    """
+    key = jax.random.PRNGKey(net.seed ^ 0x70B0)
+    if net.topology == TOPO_STAR:
+        return star(m)
+    if net.topology == TOPO_RING:
+        return ring(m)
+    if net.topology == TOPO_TORUS:
+        return torus(m)
+    if net.topology == TOPO_ERDOS_RENYI:
+        return erdos_renyi(key, m, net.er_p)
+    assert net.topology == TOPO_GEOMETRIC, net.topology
+    if net.redraw_every > 0 and t is not None:
+        key = jax.random.fold_in(key, t // net.redraw_every)
+    return random_geometric(key, m, net.geo_radius)
+
+
+def is_mobile(net: NetworkConfig) -> bool:
+    """True when the adjacency changes over rounds (must be rebuilt inside
+    the scanned round body rather than closed over once)."""
+    return net.topology == TOPO_GEOMETRIC and net.redraw_every > 0

@@ -18,7 +18,7 @@ from typing import Callable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ProtocolConfig, TrainConfig
+from repro.config import NetworkConfig, ProtocolConfig, TrainConfig
 from repro.core import operators as ops
 from repro.core.protocol import DecentralizedLearner
 from repro.data.pipeline import LearnerStreams
@@ -35,6 +35,7 @@ class Trajectory:
     cumulative_bytes: List[int] = field(default_factory=list)
     syncs: List[int] = field(default_factory=list)
     drift_rounds: List[int] = field(default_factory=list)
+    network_time: List[float] = field(default_factory=list)  # simulated s
 
     def as_dict(self):
         return {
@@ -43,6 +44,7 @@ class Trajectory:
             "cumulative_bytes": self.cumulative_bytes,
             "syncs": self.syncs,
             "drift_rounds": self.drift_rounds,
+            "network_time": self.network_time,
         }
 
 
@@ -93,6 +95,7 @@ def run_protocol_training(
     init_heterogeneity: float = 0.0,
     sample_kw: Optional[dict] = None,
     chunk_size: int = DEFAULT_CHUNK,
+    network: Optional[NetworkConfig] = None,
 ) -> tuple:
     """Returns (learner, trajectory)."""
     streams = LearnerStreams(source, m, batch=batch, seed=seed,
@@ -100,7 +103,7 @@ def run_protocol_training(
     dl = DecentralizedLearner(
         loss_fn, init_fn, m, protocol, train, seed=seed,
         init_heterogeneity=init_heterogeneity,
-        sample_weights=streams.weights)
+        sample_weights=streams.weights, network=network)
     traj = Trajectory()
     chunk = max(1, min(chunk_size, rounds))
     t = 0
@@ -114,6 +117,7 @@ def run_protocol_training(
 
         base_loss = dl.cumulative_loss
         base_totals = dict(dl.comm_totals)
+        base_net_time = dl.network_time
         metrics = dl.run_chunk(streams.next_chunk(
             n, on_round=on_round if drifting else None))
 
@@ -123,6 +127,8 @@ def run_protocol_training(
         comm_cum = {k: base_totals[k] + np.cumsum(
             np.asarray(getattr(metrics.comm, k), np.int64))
             for k in ops.CommRecord._fields}
+        net_cum = base_net_time + np.cumsum(
+            np.asarray(metrics.net_time, np.float64))
         for i in range(n):
             g = t + i
             if (g + 1) % record_every == 0 or g == rounds - 1:
@@ -131,5 +137,6 @@ def run_protocol_training(
                 traj.cumulative_bytes.append(dl.comm_bytes_of(
                     {k: int(v[i]) for k, v in comm_cum.items()}))
                 traj.syncs.append(int(comm_cum["syncs"][i]))
+                traj.network_time.append(float(net_cum[i]))
         t += n
     return dl, traj

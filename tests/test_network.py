@@ -1,0 +1,483 @@
+"""Network environment subsystem (ISSUE 2): topologies, availability,
+link costs, availability-aware operators, and the engine regression.
+
+The load-bearing test is the scan_driver-style regression: with full
+availability and a star topology the engine must reproduce the
+pre-network engine's comm counters BITWISE and its losses exactly —
+the network subsystem is strictly additive on an ideal network.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.config import NetworkConfig, ProtocolConfig, TrainConfig, get_arch
+from repro.core import operators as ops
+from repro.core.divergence import tree_mean, tree_weighted_mean
+from repro.core.protocol import DecentralizedLearner
+from repro.data.pipeline import LearnerStreams
+from repro.data.synthetic import GraphicalModelStream
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.network import availability, cost, topology
+from repro.train.loop import run_protocol_training
+
+from conftest import make_stacked, tree_allclose
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo,kw", [
+    ("star", {}),
+    ("ring", {}),
+    ("torus", {}),
+    ("erdos_renyi", dict(er_p=0.5)),
+    ("geometric", dict(geo_radius=0.5)),
+])
+def test_adjacency_well_formed(topo, kw):
+    m = 12
+    net = NetworkConfig(topology=topo, **kw)
+    adj = np.asarray(topology.adjacency(net, m))
+    assert adj.shape == (m, m) and adj.dtype == bool
+    assert (adj == adj.T).all(), "must be symmetric"
+    assert not adj.diagonal().any(), "no self loops"
+
+
+def test_star_and_ring_degrees():
+    star = np.asarray(topology.star(8))
+    assert star[0].sum() == 7 and (star[1:, 1:].sum() == 0)
+    ring = np.asarray(topology.ring(8))
+    assert (ring.sum(1) == 2).all()
+
+
+def test_torus_degrees():
+    adj = np.asarray(topology.torus(12))        # 3x4 grid
+    assert (adj.sum(1) == 4).all()
+    # prime m degenerates to a ring
+    assert (np.asarray(topology.torus(7)).sum(1) == 2).all()
+
+
+def test_mobility_redraws_every_k_rounds():
+    m, k = 12, 5
+    net = NetworkConfig(topology="geometric", geo_radius=0.5, redraw_every=k)
+    a0 = np.asarray(topology.adjacency(net, m, t=0))
+    assert (a0 == np.asarray(topology.adjacency(net, m, t=k - 1))).all()
+    assert not (a0 == np.asarray(topology.adjacency(net, m, t=k))).all()
+    # pure in t: same window, same graph
+    assert (np.asarray(topology.adjacency(net, m, t=k))
+            == np.asarray(topology.adjacency(net, m, t=2 * k - 1))).all()
+
+
+def test_static_topology_ignores_round():
+    net = NetworkConfig(topology="erdos_renyi", er_p=0.4)
+    a = np.asarray(topology.adjacency(net, 10, t=0))
+    b = np.asarray(topology.adjacency(net, 10, t=999))
+    assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# availability
+# ---------------------------------------------------------------------------
+
+def test_full_availability_mask_is_all_ones():
+    net = NetworkConfig()            # act_prob=1.0, no stragglers/outages
+    assert net.full_availability
+    for t in range(5):
+        assert bool(jnp.all(availability.sample(net, 8, t)))
+
+
+def test_dropout_rate_and_determinism():
+    net = NetworkConfig(act_prob=0.6)
+    masks = np.stack([np.asarray(availability.sample(net, 16, t))
+                      for t in range(200)])
+    assert 0.5 < masks.mean() < 0.7
+    again = np.asarray(availability.sample(net, 16, 17))
+    assert (masks[17] == again).all(), "pure in (seed, t)"
+
+
+def test_stragglers_are_less_available():
+    net = NetworkConfig(act_prob=0.95, straggler_frac=0.25,
+                        straggler_act_prob=0.2)
+    strag = np.asarray(availability.straggler_mask(net, 16))
+    assert strag.sum() == 4
+    masks = np.stack([np.asarray(availability.sample(net, 16, t))
+                      for t in range(300)])
+    assert masks[:, ~strag].mean() > 0.9
+    assert masks[:, strag].mean() < 0.35
+
+
+def test_scheduled_outage_window():
+    net = NetworkConfig(outage_every=10, outage_length=3, outage_frac=0.5)
+    m = 8
+    down_per_round = [m - int(availability.sample(net, m, t).sum())
+                      for t in range(20)]
+    # inside each window exactly outage_frac*m learners are dark
+    for t in (0, 1, 2, 10, 11, 12):
+        assert down_per_round[t] == 4, (t, down_per_round)
+    for t in (3, 7, 9, 15, 19):
+        assert down_per_round[t] == 0, (t, down_per_round)
+
+
+def test_availability_samples_inside_scan():
+    net = NetworkConfig(act_prob=0.5)
+
+    def body(carry, t):
+        return carry, availability.sample(net, 8, t)
+
+    _, masks = jax.jit(
+        lambda: jax.lax.scan(body, 0, jnp.arange(32)))()
+    eager = np.stack([np.asarray(availability.sample(net, 8, t))
+                      for t in range(32)])
+    assert (np.asarray(masks) == eager).all()
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_link_profile_round_robin():
+    net = NetworkConfig(link_classes=("wifi", "lte"))
+    bw, lat = cost.link_profile(net, 4)
+    assert float(bw[0]) == np.float32(cost.LINK_CLASSES["wifi"].bandwidth)
+    assert float(bw[1]) == np.float32(cost.LINK_CLASSES["lte"].bandwidth)
+    assert float(lat[2]) == np.float32(cost.LINK_CLASSES["wifi"].latency)
+    with pytest.raises(KeyError):
+        cost.link_profile(NetworkConfig(link_classes=("warp-drive",)), 4)
+
+
+def test_round_network_time_slowest_link():
+    bw = jnp.asarray([1e6, 1e3], jnp.float32)       # bytes/s
+    lat = jnp.asarray([0.0, 0.0], jnp.float32)
+    xfers = jnp.asarray([2, 2], jnp.int32)
+    active = jnp.ones((2,), bool)
+    t = cost.round_network_time(xfers, active, jnp.int32(0), 1000, bw, lat)
+    # slowest link: 2 transfers * 1000B / 1e3 B/s = 2s (parallel links)
+    assert np.isclose(float(t), 2.0)
+    t0 = cost.round_network_time(jnp.zeros(2, jnp.int32), active,
+                                 jnp.int32(0), 1000, bw, lat)
+    assert float(t0) == 0.0
+    # control messages add a round-trip on the slowest ACTIVE link
+    lat2 = jnp.asarray([0.1, 0.4], jnp.float32)
+    tm = cost.round_network_time(jnp.zeros(2, jnp.int32),
+                                 jnp.asarray([True, False]),
+                                 jnp.int32(3), 1000, bw, lat2)
+    assert np.isclose(float(tm), 0.2)
+
+
+# ---------------------------------------------------------------------------
+# availability-aware operators
+# ---------------------------------------------------------------------------
+
+def _mk(m=6, seed=0, scale=1.0):
+    t = make_stacked(jax.random.PRNGKey(seed), m)
+    return jax.tree.map(lambda x: x * scale, t)
+
+
+def _state(stacked, seed=0):
+    return ops.init_state(tree_mean(stacked), seed)
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("periodic", dict(b=1)),
+    ("fedavg", dict(b=1, fedavg_c=0.5)),
+    ("dynamic", dict(b=1, delta=1e-6)),
+])
+def test_inactive_learners_untouched(kind, kw):
+    m = 8
+    stacked = _mk(m=m, scale=2.0)
+    cfg = ProtocolConfig(kind=kind, **kw)
+    active = jnp.asarray([True, False, True, True, False, True, True, False])
+    new, _, rec, xfers = ops.apply_operator(
+        cfg, stacked, _state(stacked), active=active)
+    for i in np.flatnonzero(~np.asarray(active)):
+        a = jax.tree.map(lambda x: x[i], new)
+        b = jax.tree.map(lambda x: x[i], stacked)
+        assert all(np.array_equal(x, y) for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        assert int(xfers[i]) == 0
+    assert int(rec.model_up) <= int(jnp.sum(active))
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("periodic", dict(b=1)),
+    ("dynamic", dict(b=1, delta=1e-6)),
+    ("dynamic", dict(b=1, delta=0.5)),
+])
+def test_all_ones_mask_matches_unmasked(kind, kw):
+    """The masked code path with a full mask = the unmasked operator (comm
+    exactly, params to float tolerance — fedavg is excluded: its masked
+    path draws the subset differently)."""
+    stacked = _mk(m=6, scale=2.0)
+    cfg = ProtocolConfig(kind=kind, **kw)
+    new_u, st_u, rec_u, xf_u = ops.apply_operator(cfg, stacked, _state(stacked))
+    new_m, st_m, rec_m, xf_m = ops.apply_operator(
+        cfg, stacked, _state(stacked), active=jnp.ones((6,), bool))
+    for f in ops.CommRecord._fields:
+        assert int(getattr(rec_u, f)) == int(getattr(rec_m, f)), f
+    assert (np.asarray(xf_u) == np.asarray(xf_m)).all()
+    assert tree_allclose(new_u, new_m, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("periodic", dict(b=1)),
+    ("fedavg", dict(b=1, fedavg_c=0.5)),
+    ("dynamic", dict(b=1, delta=1e-6)),
+])
+def test_empty_active_set_is_a_noop(kind, kw):
+    """Nobody reachable: no comm, no NaNs, configuration unchanged."""
+    stacked = _mk(m=5, scale=3.0)
+    cfg = ProtocolConfig(kind=kind, **kw)
+    new, state, rec, xfers = ops.apply_operator(
+        cfg, stacked, _state(stacked), active=jnp.zeros((5,), bool))
+    assert all(np.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(new), jax.tree.leaves(stacked)))
+    assert int(rec.syncs) == 0 and int(rec.model_up) == 0
+    assert int(jnp.sum(xfers)) == 0
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(new))
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(state.ref))
+
+
+def test_dynamic_balancing_respects_reachability():
+    """The balancing loop may only augment over reachable learners."""
+    m = 8
+    stacked = _mk(m=m, scale=0.01)
+    ref = tree_mean(stacked)
+    # one big violator, tiny delta -> balancing wants everyone; half the
+    # fleet is unreachable, so the final B is exactly the reachable half
+    stacked = jax.tree.map(lambda x: x.at[0].set(x[0] + 5.0), stacked)
+    active = jnp.asarray([True, True, True, True, False, False, False, False])
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=1e-8)
+    new, state, rec, xfers = ops.apply_operator(
+        cfg, stacked, ops.init_state(ref), active=active)
+    assert int(rec.model_up) == 4                 # the reachable half
+    assert int(rec.full_syncs) == 1               # full among reachable
+    assert (np.asarray(xfers)[4:] == 0).all()
+    for i in range(4, 8):
+        a = jax.tree.map(lambda x: x[i], new)
+        b = jax.tree.map(lambda x: x[i], stacked)
+        assert all(np.array_equal(x, y) for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_gossip_preserves_mean_and_isolates_inactive():
+    m = 8
+    stacked = _mk(m=m, scale=2.0)
+    cfg = ProtocolConfig(kind="gossip", b=1)
+    adj = topology.ring(m)
+    new, _, rec, xfers = ops.apply_operator(
+        cfg, stacked, _state(stacked), adjacency=adj)
+    # Metropolis weights are doubly stochastic -> mean invariance
+    assert tree_allclose(tree_mean(stacked), tree_mean(new),
+                         rtol=1e-5, atol=1e-6)
+    assert int(rec.model_up) == int(rec.model_down) == 8   # ring: 8 edges
+    assert (np.asarray(xfers) == 4).all()                  # 2 neighbors * 2
+    # knock out one learner: it keeps its model bitwise
+    active = jnp.ones((m,), bool).at[3].set(False)
+    new2, _, _, xf2 = ops.apply_operator(
+        cfg, stacked, _state(stacked), active=active, adjacency=adj)
+    a = jax.tree.map(lambda x: x[3], new2)
+    b = jax.tree.map(lambda x: x[3], stacked)
+    assert all(np.array_equal(x, y) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    assert int(xf2[3]) == 0
+
+
+def test_full_syncs_means_all_reachable_for_every_operator():
+    """Consistent semantics under masks: full_syncs=1 iff the sync covered
+    every REACHABLE learner (periodic always does; fedavg with C=1 does;
+    gossip needs a complete active subgraph)."""
+    m = 6
+    stacked = _mk(m=m, scale=2.0)
+    active = jnp.asarray([True, True, True, False, False, True])
+    _, _, rec_p, _ = ops.apply_operator(
+        ProtocolConfig(kind="periodic", b=1), stacked, _state(stacked),
+        active=active)
+    assert int(rec_p.full_syncs) == 1
+    _, _, rec_f, _ = ops.apply_operator(
+        ProtocolConfig(kind="fedavg", b=1, fedavg_c=1.0), stacked,
+        _state(stacked), active=active)
+    assert int(rec_f.full_syncs) == 1
+    _, _, rec_h, _ = ops.apply_operator(
+        ProtocolConfig(kind="fedavg", b=1, fedavg_c=0.5), stacked,
+        _state(stacked), active=active)
+    assert int(rec_h.full_syncs) == 0
+    _, _, rec_g, _ = ops.apply_operator(
+        ProtocolConfig(kind="gossip", b=1), stacked, _state(stacked),
+        active=active, adjacency=topology.complete(m))
+    assert int(rec_g.full_syncs) == 1
+    _, _, rec_r, _ = ops.apply_operator(
+        ProtocolConfig(kind="gossip", b=1), stacked, _state(stacked),
+        active=active, adjacency=topology.ring(m))
+    assert int(rec_r.full_syncs) == 0
+
+
+def test_gossip_requires_adjacency():
+    stacked = _mk(m=4)
+    with pytest.raises(ValueError):
+        ops.apply_operator(ProtocolConfig(kind="gossip", b=1), stacked,
+                           _state(stacked))
+
+
+def test_tree_weighted_mean_zero_weights_is_finite():
+    stacked = _mk(m=4)
+    mean = tree_weighted_mean(stacked, jnp.zeros((4,)))
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(mean))
+
+
+# ---------------------------------------------------------------------------
+# CommRecord invariants under random masks (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(kind=st.sampled_from(["periodic", "fedavg", "dynamic", "gossip"]),
+       m=st.integers(2, 8), seed=st.integers(0, 10_000),
+       mask_bits=st.integers(0, 255))
+def test_comm_record_invariants_under_random_masks(kind, m, seed, mask_bits):
+    stacked = make_stacked(jax.random.PRNGKey(seed), m)
+    active = jnp.asarray([(mask_bits >> i) & 1 == 1 for i in range(m)])
+    kw = dict(b=1)
+    if kind == "dynamic":
+        kw["delta"] = 0.05
+    cfg = ProtocolConfig(kind=kind, **kw)
+    adj = topology.ring(m) if kind == "gossip" else None
+    new, _, rec, xfers = ops.apply_operator(
+        cfg, stacked, _state(stacked, seed), active=active, adjacency=adj)
+    up, down = int(rec.model_up), int(rec.model_down)
+    assert up == down
+    assert int(rec.messages) >= 0
+    assert 0 <= int(rec.syncs) <= 1 and 0 <= int(rec.full_syncs) <= 1
+    assert (np.asarray(xfers) >= 0).all()
+    total_xfers = int(jnp.sum(xfers))
+    # coordinator links carry up+down; a gossip transfer occupies BOTH
+    # endpoints' links
+    assert total_xfers == (2 * (up + down) if kind == "gossip" else up + down)
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(new))
+
+
+# ---------------------------------------------------------------------------
+# engine regression: ideal network == pre-network engine, bitwise
+# ---------------------------------------------------------------------------
+
+def _mlp_setup():
+    cfg = get_arch("drift_mlp", smoke=True)
+    return (lambda p, b: cnn_loss(cfg, p, b),
+            lambda k: init_cnn_params(cfg, k))
+
+
+def _run_engine(proto, network, rounds=40, m=6):
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    streams = LearnerStreams(src, m, batch=10, seed=0)
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, m, proto,
+        TrainConfig(optimizer="sgd", learning_rate=0.05), network=network)
+    dl.run_chunk(streams.next_chunk(rounds))
+    return dl
+
+
+@pytest.mark.parametrize("proto", [
+    ProtocolConfig(kind="periodic", b=3),
+    ProtocolConfig(kind="fedavg", b=2, fedavg_c=0.5),
+    ProtocolConfig(kind="dynamic", b=2, delta=0.5),
+])
+def test_ideal_network_reproduces_engine_bitwise(proto):
+    """ISSUE-2 acceptance: act_prob=1.0 + star topology == the pre-network
+    engine — comm counters bitwise, losses exactly, params bitwise."""
+    base = _run_engine(proto, None)
+    net = _run_engine(proto, NetworkConfig())   # star, full availability
+    assert base.comm_totals == net.comm_totals
+    assert base.cumulative_loss == net.cumulative_loss
+    assert all(np.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(base.params), jax.tree.leaves(net.params)))
+
+
+def test_dropout_chunk_runs_scanned_and_accounts():
+    """Dropout + topology runs inside run_chunk (stacked per-round metrics
+    come back from ONE compiled program) and the new accounting holds."""
+    proto = ProtocolConfig(kind="dynamic", b=2, delta=0.5)
+    net = NetworkConfig(act_prob=0.6, topology="ring",
+                        link_classes=("wifi", "lte"))
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    streams = LearnerStreams(src, 6, batch=10, seed=0)
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, 6, proto,
+        TrainConfig(optimizer="sgd", learning_rate=0.05), network=net)
+    n = 32
+    metrics = dl.run_chunk(streams.next_chunk(n))
+    assert metrics.num_active.shape == (n,)
+    assert metrics.net_time.shape == (n,)
+    assert metrics.link_xfers.shape == (n, 6)
+    assert np.isfinite(dl.cumulative_loss)
+    assert 0.0 < dl.mean_active() < 1.0
+    assert dl.network_time >= 0.0
+    # per-link accounting consistent with the global counters
+    assert (int(np.sum(dl.link_xfer_totals))
+            == dl.comm_totals["model_up"] + dl.comm_totals["model_down"])
+    assert (dl.per_link_bytes()
+            == dl.link_xfer_totals * dl.model_bytes).all()
+
+
+def test_gossip_mobile_geometric_end_to_end():
+    proto = ProtocolConfig(kind="gossip", b=2)
+    net = NetworkConfig(topology="geometric", geo_radius=0.6,
+                        redraw_every=5, act_prob=0.8)
+    dl = _run_engine(proto, net, rounds=30)
+    assert np.isfinite(dl.cumulative_loss)
+    assert dl.comm_totals["model_up"] == dl.comm_totals["model_down"]
+    assert dl.comm_totals["syncs"] >= 1
+
+
+def test_loop_threads_network_and_records_sim_time():
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    net = NetworkConfig(act_prob=0.7, link_classes=("lte",))
+    dl, traj = run_protocol_training(
+        loss_fn, init_fn, src, m=5, rounds=40,
+        protocol=ProtocolConfig(kind="periodic", b=5),
+        train=TrainConfig(optimizer="sgd", learning_rate=0.05),
+        batch=10, record_every=10, network=net)
+    assert len(traj.network_time) == len(traj.rounds)
+    assert traj.network_time == sorted(traj.network_time)   # cumulative
+    assert np.isclose(traj.network_time[-1], dl.network_time)
+    assert "network_time" in traj.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# config validation (satellites)
+# ---------------------------------------------------------------------------
+
+def test_protocol_config_validation():
+    with pytest.raises(AssertionError):
+        ProtocolConfig(kind="fedavg", fedavg_c=0.0)
+    with pytest.raises(AssertionError):
+        ProtocolConfig(kind="fedavg", fedavg_c=1.5)
+    with pytest.raises(AssertionError):
+        ProtocolConfig(kind="dynamic", delta=0.0)
+    # delta is dynamic-only: a periodic/nosync config must not be rejected
+    # over a field it never reads
+    ProtocolConfig(kind="periodic", delta=0.0)
+    ProtocolConfig(kind="nosync", delta=-1.0)
+
+
+def test_network_config_validation():
+    with pytest.raises(AssertionError):
+        NetworkConfig(topology="full-mesh-of-dreams")
+    with pytest.raises(AssertionError):
+        NetworkConfig(act_prob=0.0)
+    with pytest.raises(AssertionError):
+        NetworkConfig(outage_every=5, outage_length=0)
+    with pytest.raises(AssertionError):
+        # an outage outlasting its period would be a permanent blackout
+        NetworkConfig(outage_every=3, outage_length=5)
+    with pytest.raises(AssertionError):
+        NetworkConfig(link_classes=())
+    with pytest.raises(AssertionError):
+        # mobility only applies to the geometric graph
+        NetworkConfig(topology="ring", redraw_every=10)
+    assert NetworkConfig().full_availability
+    assert not NetworkConfig(act_prob=0.9).full_availability
+    assert not NetworkConfig(straggler_frac=0.5).full_availability
+    assert not NetworkConfig(outage_every=10).full_availability

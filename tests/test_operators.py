@@ -50,7 +50,7 @@ def test_mean_invariance(kind, kw):
     stacked = _mk(m=8, scale=2.0)
     cfg = ProtocolConfig(kind=kind, **kw)
     before = tree_mean(stacked)
-    new, _, _ = ops.apply_operator(cfg, stacked, _state(stacked))
+    new, _, _, _ = ops.apply_operator(cfg, stacked, _state(stacked))
     after = tree_mean(new)
     assert tree_allclose(before, after, rtol=1e-4, atol=1e-5)
 
@@ -64,7 +64,7 @@ def test_divergence_bounded_after_dynamic(delta):
     stacked = _mk(m=10, scale=3.0)
     cfg = ProtocolConfig(kind="dynamic", b=1, delta=delta)
     state = _state(stacked)
-    new, new_state, rec = ops.apply_operator(cfg, stacked, state)
+    new, new_state, rec, _ = ops.apply_operator(cfg, stacked, state)
     # after the operator either all local conditions hold w.r.t. the (new)
     # reference, or a full sync happened (divergence 0)
     d = float(divergence(new))
@@ -120,7 +120,7 @@ def test_periodic_schedule():
     state = _state(stacked)
     syncs = []
     for t in range(9):
-        stacked_new, state, rec = ops.apply_operator(cfg, stacked, state)
+        stacked_new, state, rec, _ = ops.apply_operator(cfg, stacked, state)
         syncs.append(int(rec.syncs))
     assert syncs == [0, 0, 1, 0, 0, 1, 0, 0, 1]
 
@@ -128,7 +128,7 @@ def test_periodic_schedule():
 def test_continuous_is_periodic_b1():
     stacked = _mk(m=4, scale=2.0)
     cfg = ProtocolConfig(kind="continuous", b=1)
-    new, _, rec = ops.apply_operator(cfg, stacked, _state(stacked))
+    new, _, rec, _ = ops.apply_operator(cfg, stacked, _state(stacked))
     mean = tree_mean(stacked)
     for i in range(4):
         fi = jax.tree.map(lambda x: x[i], new)
@@ -140,7 +140,7 @@ def test_fedavg_subset_size():
     m = 10
     stacked = _mk(m=m, scale=2.0)
     cfg = ProtocolConfig(kind="fedavg", b=1, fedavg_c=0.3)
-    new, _, rec = ops.apply_operator(cfg, stacked, _state(stacked))
+    new, _, rec, _ = ops.apply_operator(cfg, stacked, _state(stacked))
     # exactly ceil(C*m)=3 learners pulled+pushed
     assert int(rec.model_up) == 3 and int(rec.model_down) == 3
     # the other 7 are untouched
@@ -159,7 +159,7 @@ def test_dynamic_no_violation_no_comm():
     # delta larger than any ||f_i - r||^2 -> zero communication
     dmax = float(jnp.max(per_learner_sq_distance(stacked, ref)))
     cfg = ProtocolConfig(kind="dynamic", b=1, delta=dmax * 1.01)
-    new, _, rec = ops.apply_operator(cfg, stacked, ops.init_state(ref))
+    new, _, rec, _ = ops.apply_operator(cfg, stacked, ops.init_state(ref))
     assert int(rec.model_up) == 0 and int(rec.model_down) == 0
     assert tree_allclose(new, stacked)
 
@@ -176,7 +176,7 @@ def test_dynamic_partial_balancing_cheaper_than_full():
         lambda x: x.at[0].set(x[0] + 0.15), stacked)
     cfg = ProtocolConfig(kind="dynamic", b=1, delta=0.05,
                          augmentation="max_distance")
-    new, state, rec = ops.apply_operator(cfg, stacked, ops.init_state(ref))
+    new, state, rec, _ = ops.apply_operator(cfg, stacked, ops.init_state(ref))
     assert int(rec.syncs) == 1
     assert int(rec.model_up) < m            # partial, not full
     assert int(rec.full_syncs) == 0
@@ -190,7 +190,7 @@ def test_dynamic_worst_case_full_sync_bounded_by_periodic():
     m = 6
     stacked = _mk(m=m, scale=10.0)
     cfg = ProtocolConfig(kind="dynamic", b=1, delta=1e-8)
-    _, _, rec = ops.apply_operator(cfg, stacked, _state(stacked))
+    _, _, rec, _ = ops.apply_operator(cfg, stacked, _state(stacked))
     assert int(rec.model_up) + int(rec.model_down) <= 2 * m
 
 
@@ -206,7 +206,7 @@ def test_violation_counter_forces_full_sync():
         # keep perturbing one learner so violations accumulate
         stacked = jax.tree.map(
             lambda x: x.at[t % m].add(0.4), stacked)
-        stacked, state, rec = ops.apply_operator(cfg, stacked, state)
+        stacked, state, rec, _ = ops.apply_operator(cfg, stacked, state)
         full_syncs += int(rec.full_syncs)
     assert full_syncs >= 1
 
@@ -220,8 +220,8 @@ def test_weighted_reduces_to_unweighted():
     cfg_w = ProtocolConfig(kind="dynamic", b=1, delta=1e-6, weighted=True)
     cfg_u = ProtocolConfig(kind="dynamic", b=1, delta=1e-6)
     w = jnp.full((5,), 7.0)
-    new_w, _, _ = ops.apply_operator(cfg_w, stacked, _state(stacked), w)
-    new_u, _, _ = ops.apply_operator(cfg_u, stacked, _state(stacked))
+    new_w, _, _, _ = ops.apply_operator(cfg_w, stacked, _state(stacked), w)
+    new_u, _, _, _ = ops.apply_operator(cfg_u, stacked, _state(stacked))
     assert tree_allclose(new_w, new_u, rtol=1e-5, atol=1e-6)
 
 
@@ -230,7 +230,7 @@ def test_weighted_mean_is_sample_weighted():
     stacked = _mk(m=m, scale=1.0)
     w = jnp.asarray([1.0, 2.0, 3.0])
     cfg = ProtocolConfig(kind="periodic", b=1, weighted=True)
-    new, _, _ = ops.apply_operator(cfg, stacked, _state(stacked), w)
+    new, _, _, _ = ops.apply_operator(cfg, stacked, _state(stacked), w)
     expect = jax.tree.map(
         lambda x: jnp.einsum("m...,m->...", x, w) / jnp.sum(w), stacked)
     got = jax.tree.map(lambda x: x[0], new)
