@@ -9,6 +9,7 @@ comparable loss and less communication.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import mnist_setup, run_mnist_protocol, save_rows
 from repro.config import ProtocolConfig, TrainConfig
@@ -45,14 +46,17 @@ def run(quick: bool = True):
             "accuracy": round(acc, 4),
         })
 
-    # serial baseline: observes m*T samples centrally
+    # serial baseline: observes m*T samples centrally — scanned like the
+    # fleet engine (SerialLearner.run_chunk: per-round keys identical to
+    # the old per-step loop, one jitted dispatch for the whole sweep)
     cfg, loss_fn, init_fn = mnist_setup()
     src = SyntheticMNIST(seed=0, image_size=14)
     sl = SerialLearner(loss_fn, init_fn,
                        TrainConfig(optimizer="sgd", learning_rate=0.1))
     key = jax.random.PRNGKey(123)
-    for t in range(rounds):
-        sl.step(src.sample(jax.random.fold_in(key, t), 10 * m))
+    keys = jax.vmap(lambda t: jax.random.fold_in(key, t))(
+        jnp.arange(rounds))
+    sl.run_chunk(jax.vmap(lambda k: src.sample(k, 10 * m))(keys))
     rows.append({"protocol": "serial", "cumulative_loss":
                  round(sl.cumulative_loss * m, 2),   # paper sums over mT inputs
                  "comm_bytes": 0, "syncs": 0, "accuracy": None})

@@ -24,6 +24,7 @@ from benchmarks import (
     fig6_2_init_heterogeneity,
     figA6_optimizers,
     figC_unbalanced,
+    fig_hierarchy,
     fig_network_regimes,
     kernel_bench,
     roofline_table,
@@ -42,6 +43,7 @@ ALL = [
     figA6_optimizers,
     figC_unbalanced,
     fig_network_regimes,
+    fig_hierarchy,
     kernel_bench,
     roofline_table,
 ]

@@ -1,0 +1,78 @@
+"""A two-tier fleet: edge aggregators between the devices and the cloud.
+
+Real fleets are not flat: phones in a depot sync with the depot's edge
+server over cheap local links, and only the edge servers talk to the
+coordinator over the expensive backhaul. The staged sync kernel expresses
+exactly that as configuration (``HierarchyConfig``): the flat protocol you
+already know runs *inside each cluster* against its edge aggregator, and a
+second operator — with its own cadence, divergence threshold, and payload
+size — runs among the aggregators. Both tiers live inside the scanned
+round, and the per-link bytes ledger prices each tier at its own payload
+size, so a quantized backhaul stays exact.
+
+This walkthrough puts twelve learners in three clusters on a flaky
+network and compares flat dynamic averaging against two-tier dynamic
+averaging with a looser inter-tier threshold and a 1-byte-per-param
+(8-bit-quantized) backhaul.
+
+    PYTHONPATH=src python examples/hierarchical_fleet.py
+"""
+import numpy as np
+
+from repro.config import (
+    HierarchyConfig, NetworkConfig, ProtocolConfig, TrainConfig, get_arch,
+)
+from repro.data.synthetic import SyntheticMNIST
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.train.loop import run_protocol_training
+
+M, CLUSTERS = 12, 3
+
+FLEET = NetworkConfig(act_prob=0.8, link_classes=("wifi", "lte"))
+
+FLAT = ProtocolConfig(kind="dynamic", b=5, delta=0.5)
+
+TWO_TIER = ProtocolConfig(
+    kind="dynamic", b=5, delta=0.5,        # intra: devices <-> edge server
+    tiers=HierarchyConfig(
+        num_clusters=CLUSTERS,
+        inter=ProtocolConfig(kind="dynamic", b=10, delta=1.0,
+                             bytes_per_param=1),   # quantized backhaul
+        link_class="wired",
+    ),
+)
+
+
+def main():
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+
+    print(f"fleet: m={M} in {CLUSTERS} clusters, act_prob={FLEET.act_prob}, "
+          f"links={FLEET.link_classes}, backhaul=wired (8-bit payload)\n")
+
+    for name, proto in [("flat dynamic", FLAT), ("two-tier dynamic",
+                                                 TWO_TIER)]:
+        dl, _ = run_protocol_training(
+            loss_fn, init_fn, SyntheticMNIST(seed=0, image_size=14),
+            m=M, rounds=150, protocol=proto,
+            train=TrainConfig(optimizer="sgd", learning_rate=0.1),
+            batch=10, seed=0, network=FLEET)
+        ledger = dl.per_link_bytes()
+        member, uplink = ledger[:M].sum(), ledger[M:].sum()
+        assert int(ledger.sum()) == dl.comm_bytes()   # the ledger balances
+        print(f"{name:17s} loss={dl.cumulative_loss:9.1f} "
+              f"total={dl.comm_bytes() / 1e6:6.1f}MB "
+              f"member_links={member / 1e6:6.1f}MB "
+              f"coordinator_uplinks="
+              f"{(uplink if len(ledger) > M else member) / 1e6:6.1f}MB "
+              f"net_time={dl.network_time:6.2f}s")
+
+    print("\nthe edge tier absorbs the chatter: intra-cluster violations "
+          "settle against the local aggregator, and only the aggregators' "
+          "(quantized) models cross the backhaul — the ledger prices every "
+          "link exactly, per tier.")
+
+
+if __name__ == "__main__":
+    main()

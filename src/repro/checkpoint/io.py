@@ -78,20 +78,38 @@ def load_pytree(path: str):
     return root
 
 
+def _sync_dict(sync_state) -> dict:
+    return {"ref": sync_state.ref, "v": sync_state.v,
+            "rng": sync_state.rng, "step": sync_state.step}
+
+
 def save_protocol_state(path: str, params, opt_state, sync_state) -> None:
+    from repro.core.sync.hierarchy import HierSyncState
     save_pytree(path + ".params.npz", params)
     save_pytree(path + ".opt.npz", opt_state)
-    save_pytree(path + ".sync.npz", {
-        "ref": sync_state.ref, "v": sync_state.v,
-        "rng": sync_state.rng, "step": sync_state.step,
-    })
+    if isinstance(sync_state, HierSyncState):
+        # two-tier state: per-cluster intra states + the inter-tier state
+        save_pytree(path + ".sync.npz", {
+            "intra": _sync_dict(sync_state.intra),
+            "inter": _sync_dict(sync_state.inter),
+        })
+    else:
+        save_pytree(path + ".sync.npz", _sync_dict(sync_state))
+
+
+def _sync_state(d):
+    from repro.core.operators import SyncState
+    return SyncState(ref=d["ref"], v=d["v"], rng=d["rng"], step=d["step"])
 
 
 def load_protocol_state(path: str):
-    from repro.core.operators import SyncState
+    from repro.core.sync.hierarchy import HierSyncState
     params = load_pytree(path + ".params.npz")
     opt = load_pytree(path + ".opt.npz")
     sync = load_pytree(path + ".sync.npz")
-    state = SyncState(ref=sync["ref"], v=sync["v"], rng=sync["rng"],
-                      step=sync["step"])
+    if "intra" in sync:
+        state = HierSyncState(intra=_sync_state(sync["intra"]),
+                              inter=_sync_state(sync["inter"]))
+    else:
+        state = _sync_state(sync)
     return params, opt, state

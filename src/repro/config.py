@@ -264,6 +264,13 @@ class ProtocolConfig:
     coordinator's balancing strategy for dynamic averaging. ``gossip`` is
     the coordinator-free baseline: neighborhood averaging over the network
     topology (``NetworkConfig``) every ``b`` rounds.
+
+    ``tiers`` turns the flat protocol into a two-tier star-of-stars
+    (``HierarchyConfig``): THIS config becomes the intra-tier operator
+    (learners ↔ their cluster's edge aggregator, own ``b``/``delta``) and
+    ``tiers.inter`` runs among the edge aggregators. ``tiers=None`` is the
+    flat single-coordinator protocol, bitwise-identical to the
+    pre-hierarchy engine.
     """
     kind: str = PROTO_DYNAMIC
     b: int = 10
@@ -272,6 +279,7 @@ class ProtocolConfig:
     augmentation: str = "max_distance"   # max_distance | random | all
     weighted: bool = False               # Algorithm 2 (unbalanced B^i)
     bytes_per_param: int = 4
+    tiers: Optional[HierarchyConfig] = None   # two-tier hierarchy on top
 
     def __post_init__(self):
         assert self.kind in (
@@ -284,6 +292,55 @@ class ProtocolConfig:
         # not be rejected over a field it never uses
         if self.kind == PROTO_DYNAMIC:
             assert self.delta > 0
+        if self.tiers is not None and self.kind == PROTO_GOSSIP:
+            raise ValueError(
+                "gossip cannot be the intra-tier operator of a hierarchy: "
+                "it averages over the peer overlay, but a cluster's members "
+                "talk to their edge aggregator over uplinks. Use a "
+                "coordinator operator (periodic/fedavg/dynamic) per tier.")
+
+
+@dataclass(frozen=True)
+class HierarchyConfig:
+    """Two-tier star-of-stars coordinator hierarchy.
+
+    The fleet is partitioned into ``num_clusters`` contiguous, equal-size
+    clusters (the engine rejects ``m % num_clusters != 0`` at construction
+    with a clear message). Each round the enclosing ``ProtocolConfig`` runs
+    as the *intra-tier* operator inside every cluster (members ↔ their edge
+    aggregator, with per-cluster reference/violation state), the edge
+    aggregator model is the availability-masked cluster mean, and
+    ``inter`` runs among the ``num_clusters`` aggregator models (its own
+    cadence ``b``, threshold ``delta``, and payload ``bytes_per_param`` —
+    e.g. a quantized backhaul). When the inter tier synchronizes a set of
+    clusters, their reachable members receive the inter-tier adjustment.
+
+    ``link_class`` is the aggregator↔top-coordinator uplink class used by
+    the network cost model (edge servers usually sit on wired backhaul);
+    member links keep their ``NetworkConfig.link_classes`` assignment.
+    """
+    num_clusters: int
+    inter: ProtocolConfig
+    link_class: str = "wired"
+
+    def __post_init__(self):
+        if self.num_clusters < 2:
+            raise ValueError(
+                f"a hierarchy needs >= 2 clusters, got {self.num_clusters} "
+                "(one cluster is just the flat protocol — drop tiers=)")
+        if self.inter.kind == PROTO_GOSSIP:
+            raise ValueError(
+                "the inter-tier operator cannot be gossip: edge aggregators "
+                "talk to the top coordinator over a star of uplinks, not a "
+                "peer overlay. Use periodic/fedavg/dynamic/nosync.")
+        if self.inter.tiers is not None:
+            raise ValueError(
+                "hierarchies do not nest: tiers.inter must have tiers=None "
+                "(the hierarchy is exactly two tiers).")
+        if self.link_class not in LINK_CLASS_NAMES:
+            raise KeyError(
+                f"unknown aggregator link class {self.link_class!r}; "
+                f"known: {sorted(LINK_CLASS_NAMES)}")
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +356,12 @@ TOPO_GEOMETRIC = "geometric"
 TOPOLOGIES = (
     TOPO_STAR, TOPO_RING, TOPO_TORUS, TOPO_ERDOS_RENYI, TOPO_GEOMETRIC,
 )
+
+# Link-class registry contract: the names configs may reference. The
+# bandwidth/latency numbers live in ``repro.network.cost.LINK_CLASSES``
+# (which asserts it covers exactly these names) — configs validate
+# membership HERE so a typo fails at construction, not at trace time.
+LINK_CLASS_NAMES = ("wired", "wifi", "lte", "edge")
 
 
 @dataclass(frozen=True)
@@ -362,6 +425,11 @@ class NetworkConfig:
             self.outage_length, self.outage_every)
         assert 0.0 <= self.outage_frac <= 1.0
         assert len(self.link_classes) >= 1
+        unknown = [c for c in self.link_classes if c not in LINK_CLASS_NAMES]
+        if unknown:
+            raise KeyError(
+                f"unknown link class(es) {unknown}; "
+                f"known: {sorted(LINK_CLASS_NAMES)}")
 
     @property
     def full_availability(self) -> bool:

@@ -5,3 +5,4 @@ from repro.core.divergence import (  # noqa: F401
 )
 from repro.core.protocol import DecentralizedLearner, make_protocol  # noqa: F401
 from repro.core import operators  # noqa: F401
+from repro.core import sync  # noqa: F401  (the staged sync kernel)

@@ -1,409 +1,25 @@
-"""Synchronization operators sigma (paper Sections 3-4), jit-compatible.
+"""Synchronization operators sigma — compatibility shim.
 
-Every operator acts on a *model configuration*: a pytree whose leaves have a
-leading learner axis ``m``. Operators return
-    (new_config, new_state, CommRecord-pytree, xfers)
-where the state carries the reference model ``r``, the violation counter
-``v`` and an rng key, the comm record counts *model transfers* and
-*scalar messages* as exact integers (bytes = transfers * model_bytes +
-messages * msg_bytes, done in reporting — keeps jit-friendly int32 math),
-and ``xfers`` is the (m,) int32 count of models crossing each learner's
-link this round (the input of the per-link cost model,
-``repro.network.cost``). For the coordinator operators
-``sum(xfers) == model_up + model_down``; for gossip every transfer
-occupies the links of BOTH endpoints, so ``sum(xfers) == 2 * (model_up +
-model_down)``.
+The monolithic operators moved into the staged sync kernel
+(``repro.core.sync``): every operator is now a composition of
+trigger → cohort → aggregate → commit stages (see
+``repro.core.sync.stages`` for the stage library and
+``repro.core.sync.kernel`` for the compositions). This module keeps the
+historical import surface — ``from repro.core import operators as ops`` —
+pointing at the kernel; numerics are bitwise-identical to the pre-kernel
+monoliths (pinned by ``tests/golden_pr2_engine.json``).
 
-Implemented operators:
-  * ``nosync``      — identity
-  * ``periodic_b``  — sigma_b: full average every b rounds (b=1: continuous)
-  * ``fedavg``      — sigma_b over a random C-fraction subset (McMahan et al.)
-  * ``dynamic``     — sigma_Delta: local conditions + coordinator balancing
-                      (Algorithm 1), optionally weighted (Algorithm 2)
-  * ``gossip``      — coordinator-free neighborhood averaging over the
-                      network topology (Metropolis–Hastings mixing)
-
-Availability (``active``: optional (m,) bool mask from
-``repro.network.availability``): unavailable learners keep training locally
-but cannot communicate — they neither violate, nor get polled, nor receive
-the average, and ``dynamic``'s balancing loop augments only over reachable
-learners. ``active=None`` is the ideal always-on network and preserves the
-pre-network engine's numerics bitwise.
+Contracts (unchanged):
+  * ``apply_operator`` returns ``(new_config, new_state, CommRecord,
+    xfers)`` where ``xfers`` is the (m,) int32 count of models crossing
+    each learner's link this round.
+  * Coordinator operators: ``sum(xfers) == model_up + model_down``;
+    gossip transfers occupy BOTH endpoints' links:
+    ``sum(xfers) == 2 * (model_up + model_down)``.
+  * ``active=None`` is the ideal always-on network and preserves the
+    pre-network engine's numerics bitwise.
 """
-from __future__ import annotations
-
-from typing import NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.config import ProtocolConfig
-from repro.core.divergence import (
-    per_learner_sq_distance, tree_mean, tree_weighted_mean,
+from repro.core.sync.kernel import (  # noqa: F401
+    OPERATORS, CommRecord, StageResult, SyncState, apply_operator,
+    apply_staged, dynamic, fedavg, gossip, init_state, nosync, periodic,
 )
-
-
-class SyncState(NamedTuple):
-    ref: object          # reference model r (single-model pytree)
-    v: jnp.ndarray       # violation counter (scalar int32)
-    rng: jnp.ndarray     # PRNG key for subsampling / random augmentation
-    step: jnp.ndarray    # round counter t (scalar int32)
-
-
-class CommRecord(NamedTuple):
-    model_up: jnp.ndarray     # models sent learner -> coordinator
-    model_down: jnp.ndarray   # models sent coordinator -> learner
-    messages: jnp.ndarray     # small control messages (violations, polls)
-    syncs: jnp.ndarray        # 1 if any averaging happened this round
-    full_syncs: jnp.ndarray   # 1 if ALL (reachable) learners were averaged
-
-    @staticmethod
-    def zero():
-        z = jnp.zeros((), jnp.int32)
-        return CommRecord(z, z, z, z, z)
-
-
-def init_state(ref_model, seed: int = 0) -> SyncState:
-    return SyncState(
-        ref=ref_model,
-        v=jnp.zeros((), jnp.int32),
-        rng=jax.random.PRNGKey(seed),
-        step=jnp.zeros((), jnp.int32),
-    )
-
-
-# ---------------------------------------------------------------------------
-# helpers
-# ---------------------------------------------------------------------------
-
-def _tree_select(mask, new, old):
-    """Per-learner select: leaf (m, ...) <- new where mask[i] else old."""
-    def sel(n, o):
-        m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
-        return jnp.where(m, n, o)
-    return jax.tree.map(sel, new, old)
-
-
-def _broadcast_model(model, m: int):
-    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), model)
-
-
-def _masked_mean(stacked, mask, weights=None):
-    """Mean of the masked subset of learners (optionally B^i-weighted).
-    An empty mask yields the zero model (``tree_weighted_mean`` guards the
-    0/0) — callers keep the previous configuration via their selects."""
-    w = mask.astype(jnp.float32)
-    if weights is not None:
-        w = w * weights.astype(jnp.float32)
-    return tree_weighted_mean(stacked, w)
-
-
-def _num_learners(stacked) -> int:
-    return jax.tree.leaves(stacked)[0].shape[0]
-
-
-def _no_xfers(m: int) -> jnp.ndarray:
-    return jnp.zeros((m,), jnp.int32)
-
-
-# ---------------------------------------------------------------------------
-# trivial operators
-# ---------------------------------------------------------------------------
-
-def nosync(cfg: ProtocolConfig, stacked, state: SyncState):
-    m = _num_learners(stacked)
-    return (stacked, state._replace(step=state.step + 1), CommRecord.zero(),
-            _no_xfers(m))
-
-
-def periodic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-             active=None):
-    """sigma_b: replace every reachable model by their mean every b rounds."""
-    m = _num_learners(stacked)
-    t = state.step + 1
-
-    def sync(_):
-        if active is None:
-            mean = (_masked_mean(stacked, jnp.ones((m,), bool), weights)
-                    if weights is not None else tree_mean(stacked))
-            newcfg = _broadcast_model(mean, m)
-            rec = CommRecord(
-                model_up=jnp.int32(m), model_down=jnp.int32(m),
-                messages=jnp.int32(0), syncs=jnp.int32(1),
-                full_syncs=jnp.int32(1))
-            return newcfg, mean, rec, jnp.full((m,), 2, jnp.int32)
-        nsync = jnp.sum(active).astype(jnp.int32)
-        mean = _masked_mean(stacked, active, weights)
-        newcfg = _tree_select(active, _broadcast_model(mean, m), stacked)
-        # the reference only moves when somebody was actually averaged
-        new_ref = jax.tree.map(
-            lambda a, b: jnp.where(nsync > 0, a, b), mean, state.ref)
-        rec = CommRecord(
-            model_up=nsync, model_down=nsync, messages=jnp.int32(0),
-            syncs=(nsync > 0).astype(jnp.int32),
-            # sigma_b always averages every reachable learner
-            full_syncs=(nsync > 0).astype(jnp.int32))
-        return newcfg, new_ref, rec, active.astype(jnp.int32) * 2
-
-    def skip(_):
-        return stacked, state.ref, CommRecord.zero(), _no_xfers(m)
-
-    do = (t % cfg.b) == 0
-    newcfg, ref, rec, xfers = jax.lax.cond(do, sync, skip, None)
-    return newcfg, state._replace(ref=ref, step=t), rec, xfers
-
-
-def fedavg(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-           active=None):
-    """sigma_b on a random subset of ceil(C*m) learners (McMahan et al. '17).
-    Under availability masks the subset is drawn from the REACHABLE
-    learners only (partial client participation)."""
-    m = _num_learners(stacked)
-    t = state.step + 1
-    k = max(1, int(round(cfg.fedavg_c * m)))
-
-    def sync(rng):
-        rng, sub = jax.random.split(rng)
-        if active is None:
-            perm = jax.random.permutation(sub, m)
-            mask = jnp.zeros((m,), bool).at[perm[:k]].set(True)
-            mean = _masked_mean(stacked, mask, weights)
-            newcfg = _tree_select(mask, _broadcast_model(mean, m), stacked)
-            rec = CommRecord(
-                model_up=jnp.int32(k), model_down=jnp.int32(k),
-                messages=jnp.int32(0), syncs=jnp.int32(1),
-                full_syncs=jnp.int32(1 if k == m else 0))
-            return newcfg, mean, rec, rng, mask.astype(jnp.int32) * 2
-        # rank the reachable learners by a fresh uniform draw and take the
-        # first min(k, |active|) — the same C-fraction target, restricted
-        # to whoever answered this round
-        r = jax.random.uniform(sub, (m,))
-        ranks = jnp.argsort(jnp.argsort(jnp.where(active, r, -jnp.inf)))
-        mask = (ranks >= m - jnp.minimum(k, jnp.sum(active))) & active
-        nsel = jnp.sum(mask).astype(jnp.int32)
-        mean = _masked_mean(stacked, mask, weights)
-        newcfg = _tree_select(mask, _broadcast_model(mean, m), stacked)
-        new_ref = jax.tree.map(
-            lambda a, b: jnp.where(nsel > 0, a, b), mean, state.ref)
-        rec = CommRecord(
-            model_up=nsel, model_down=nsel, messages=jnp.int32(0),
-            syncs=(nsel > 0).astype(jnp.int32),
-            # full = the subset covered every reachable learner
-            full_syncs=((nsel > 0) & (nsel == jnp.sum(active)))
-            .astype(jnp.int32))
-        return newcfg, new_ref, rec, rng, mask.astype(jnp.int32) * 2
-
-    def skip(rng):
-        return stacked, state.ref, CommRecord.zero(), rng, _no_xfers(m)
-
-    do = (t % cfg.b) == 0
-    newcfg, ref, rec, rng, xfers = jax.lax.cond(do, sync, skip, state.rng)
-    return newcfg, state._replace(ref=ref, rng=rng, step=t), rec, xfers
-
-
-# ---------------------------------------------------------------------------
-# dynamic averaging (Algorithm 1 / Algorithm 2)
-# ---------------------------------------------------------------------------
-
-def _balance(cfg: ProtocolConfig, stacked, ref, violated, rng, weights=None,
-             reach=None):
-    """Coordinator balancing: augment the violator set B until the partial
-    average re-enters the safe zone ||mean_B - r||^2 <= Delta or B covers
-    every REACHABLE learner (B = [m] on an ideal network).
-
-    Returns (final mask B, mean_B). The caller derives poll counts from
-    the mask (|B| minus the true violators) — the mask is the single
-    source of truth for who the coordinator contacted.
-    """
-    m = _num_learners(stacked)
-    if reach is None:
-        reach = jnp.ones((m,), bool)
-    dists = per_learner_sq_distance(stacked, ref)     # (m,) — augment priority
-
-    if cfg.augmentation == "random":
-        prio = jax.random.uniform(rng, (m,))
-    elif cfg.augmentation == "max_distance":
-        prio = dists
-    else:  # "all": jump straight to full sync on any violation
-        prio = jnp.full((m,), jnp.inf)
-
-    def mean_dist(mask):
-        mean = _masked_mean(stacked, mask, weights)
-        d = sum(
-            jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
-            for a, b in zip(jax.tree.leaves(mean), jax.tree.leaves(ref)))
-        return mean, d
-
-    if cfg.augmentation == "all":
-        mean = _masked_mean(stacked, reach, weights)
-        return reach, mean
-
-    _, d0 = mean_dist(violated)
-
-    def cond(carry):
-        mask, d = carry
-        return jnp.logical_and(jnp.any(reach & ~mask), d > cfg.delta)
-
-    def body(carry):
-        mask, _ = carry
-        cand = jnp.where(mask | ~reach, -jnp.inf, prio)
-        nxt = jnp.argmax(cand)
-        mask = mask.at[nxt].set(True)
-        _, d = mean_dist(mask)
-        return mask, d
-
-    mask, _ = jax.lax.while_loop(cond, body, (violated, d0))
-    mean = _masked_mean(stacked, mask, weights)
-    return mask, mean
-
-
-def dynamic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-            active=None):
-    """sigma_Delta with local conditions and balancing (Algorithm 1; with
-    ``weights`` = B^i it is Algorithm 2 for unbalanced sampling rates).
-    With an ``active`` mask only reachable learners violate, get polled,
-    or receive averages; a "full" sync (reference reset, counter reset)
-    is one that covers every reachable learner."""
-    m = _num_learners(stacked)
-    t = state.step + 1
-    reach = jnp.ones((m,), bool) if active is None else active
-
-    def check(args):
-        stacked, state = args
-        dists = per_learner_sq_distance(stacked, state.ref)
-        violated = (dists > cfg.delta) & reach
-        nviol = jnp.sum(violated).astype(jnp.int32)
-
-        def no_violation(rng):
-            return (stacked, state.ref, state.v,
-                    CommRecord(jnp.int32(0), jnp.int32(0), jnp.int32(0),
-                               jnp.int32(0), jnp.int32(0)), rng,
-                    _no_xfers(m))
-
-        def violation(rng):
-            rng, sub = jax.random.split(rng)
-            v_new = state.v + nviol
-            # if the counter reaches m, force a sync of every reachable
-            # learner and reset it
-            force_full = v_new >= m
-            base = jnp.where(force_full, reach, violated)
-            v_reset = jnp.where(force_full, jnp.int32(0), v_new)
-            mask, mean = _balance(cfg, stacked, state.ref, base, sub,
-                                  weights, reach)
-            full = jnp.all(mask == reach)
-            v_final = jnp.where(full, jnp.int32(0), v_reset)
-            newcfg = _tree_select(mask, _broadcast_model(mean, m), stacked)
-            # reference model updates only on full sync (Algorithm 1)
-            new_ref = jax.tree.map(
-                lambda a, b: jnp.where(full, a, b), mean, state.ref)
-            nsync = jnp.sum(mask).astype(jnp.int32)
-            # every member of the final B that did not itself violate was
-            # polled by the coordinator — counting nsync - nviol covers the
-            # balancing loop AND the forced-full path (where _balance sees
-            # an all-true mask and its internal poll counter stays 0)
-            polls = nsync - nviol
-            rec = CommRecord(
-                model_up=nsync,          # violators push + coordinator polls
-                model_down=nsync,        # partial average pushed back to B
-                messages=nviol + polls,  # violation notices + poll requests
-                syncs=jnp.int32(1),
-                full_syncs=full.astype(jnp.int32))
-            return (newcfg, new_ref, v_final, rec, rng,
-                    mask.astype(jnp.int32) * 2)
-
-        newcfg, ref, v, rec, rng, xfers = jax.lax.cond(
-            nviol > 0, violation, no_violation, state.rng)
-        return (newcfg, state._replace(ref=ref, v=v, rng=rng, step=t), rec,
-                xfers)
-
-    def skip(args):
-        stacked, state = args
-        return stacked, state._replace(step=t), CommRecord.zero(), _no_xfers(m)
-
-    do = (t % cfg.b) == 0
-    return jax.lax.cond(do, check, skip, (stacked, state))
-
-
-# ---------------------------------------------------------------------------
-# gossip (coordinator-free baseline)
-# ---------------------------------------------------------------------------
-
-def gossip(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-           active=None, adjacency=None):
-    """Neighborhood averaging over the network topology, no coordinator.
-
-    Every b rounds each reachable learner exchanges models with its
-    reachable neighbors and applies one Metropolis–Hastings mixing step
-        W_ij = 1 / (1 + max(deg_i, deg_j))   for active edges i~j
-        W_ii = 1 - sum_j W_ij
-    which is doubly stochastic for a symmetric adjacency, so the
-    configuration mean is preserved. Unreachable (or isolated) learners
-    have W row e_i and keep their model bitwise. ``weights`` (Algorithm 2
-    sample weights) are ignored — there is no coordinator to reweight the
-    average; use a coordinator operator for unbalanced fleets.
-    """
-    m = _num_learners(stacked)
-    t = state.step + 1
-    if adjacency is None:
-        raise ValueError(
-            "gossip needs an adjacency matrix — configure a NetworkConfig "
-            "topology (the engine passes it through)")
-    act = jnp.ones((m,), bool) if active is None else active
-    A = (jnp.asarray(adjacency, bool) & act[None, :] & act[:, None]
-         & ~jnp.eye(m, dtype=bool))
-    deg = jnp.sum(A, axis=1).astype(jnp.float32)
-    W = jnp.where(A, 1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :])),
-                  0.0)
-    W = W + jnp.diag(1.0 - jnp.sum(W, axis=1))
-
-    def sync(_):
-        mixed = jax.tree.map(
-            lambda x: jnp.tensordot(W.astype(x.dtype), x, axes=1), stacked)
-        edges = jnp.sum(A).astype(jnp.int32)           # directed count = 2E
-        up = edges // 2
-        na = jnp.sum(act).astype(jnp.int32)
-        rec = CommRecord(
-            model_up=up, model_down=edges - up,         # == up by symmetry
-            messages=jnp.int32(0),
-            syncs=(edges > 0).astype(jnp.int32),
-            # "all reachable averaged": the active subgraph is complete, so
-            # one mixing step couples every reachable learner
-            full_syncs=((edges > 0) & (edges == na * (na - 1)))
-            .astype(jnp.int32))
-        return mixed, rec, (2 * jnp.sum(A, axis=1)).astype(jnp.int32)
-
-    def skip(_):
-        return stacked, CommRecord.zero(), _no_xfers(m)
-
-    do = (t % cfg.b) == 0
-    newcfg, rec, xfers = jax.lax.cond(do, sync, skip, None)
-    return newcfg, state._replace(step=t), rec, xfers
-
-
-OPERATORS = {
-    "nosync": nosync,
-    "periodic": periodic,
-    "continuous": periodic,     # cfg.b == 1
-    "fedavg": fedavg,
-    "dynamic": dynamic,
-    "gossip": gossip,
-}
-
-
-def apply_operator(cfg: ProtocolConfig, stacked, state: SyncState,
-                   weights=None, active=None, adjacency=None):
-    """Dispatch to the configured operator.
-
-    ``active``: optional (m,) bool reachability mask for this round;
-    ``adjacency``: optional (m, m) bool peer overlay (required by gossip).
-    Returns ``(new_config, new_state, CommRecord, xfers)``.
-    """
-    op = OPERATORS[cfg.kind]
-    if cfg.kind == "nosync":
-        return op(cfg, stacked, state)
-    if not cfg.weighted:
-        weights = None
-    if cfg.kind == "gossip":
-        return op(cfg, stacked, state, weights, active=active,
-                  adjacency=adjacency)
-    return op(cfg, stacked, state, weights, active=active)

@@ -20,6 +20,16 @@ operators become availability-aware, and the link-cost model turns each
 round's transfers into simulated wall-clock (``net_time``) and per-link
 bytes. ``network=None`` is the ideal always-on star and reproduces the
 pre-network engine bitwise.
+
+Synchronization runs through the staged sync kernel (``repro.core.sync``),
+which also supplies the per-round **bytes ledger**: every link's exact byte
+count (model payloads at that link's tier payload size + control messages
+attributed to the link that sent them), accumulated host-side in int64.
+With ``ProtocolConfig.tiers`` (a ``HierarchyConfig``) the round becomes the
+two-tier star-of-stars: the configured protocol runs inside each cluster,
+``tiers.inter`` runs among the edge aggregators, and the ledger grows g
+aggregator-uplink rows priced at the inter tier's payload size.
+``tiers=None`` reproduces the flat engine bitwise.
 """
 from __future__ import annotations
 
@@ -33,6 +43,9 @@ import numpy as np
 from repro.config import NetworkConfig, ProtocolConfig, TrainConfig
 from repro.core import operators as ops
 from repro.core.divergence import divergence, flat_size
+from repro.core.sync.hierarchy import (
+    apply_hierarchical, init_hier_state, validate_hierarchy,
+)
 from repro.network import availability as net_availability
 from repro.network import cost as net_cost
 from repro.network import topology as net_topology
@@ -46,6 +59,12 @@ class ProtocolMetrics(NamedTuple):
     num_active: jnp.ndarray          # scalar int32 — reachable learners
     net_time: jnp.ndarray            # scalar float32 — simulated seconds
     link_xfers: jnp.ndarray          # (m,) int32 — models per learner link
+    link_counts: jnp.ndarray         # (L, 2) int32 — the ledger's inputs:
+    #   [model transfers, control messages] per link this round. L = m
+    #   learner links, plus num_clusters aggregator uplinks under a
+    #   hierarchy. Counts stay small int32 on device; the HOST prices them
+    #   into int64 bytes (per-link payload size × transfers + msg_bytes ×
+    #   messages), so billion-parameter payloads never overflow
 
 
 class DecentralizedLearner:
@@ -98,10 +117,24 @@ class DecentralizedLearner:
 
         self.params = stacked
         self.opt_state = jax.vmap(self.opt.init)(self.params)
-        self.sync_state = ops.init_state(base, seed)
         self.sample_weights = sample_weights
         self.model_size = flat_size(base)
         self.model_bytes = self.model_size * protocol.bytes_per_param
+
+        # two-tier hierarchy (ProtocolConfig.tiers): per-cluster intra
+        # state + inter-tier state; aggregator uplinks get their own
+        # ledger rows and payload size (tiers.inter.bytes_per_param)
+        self.tiers = protocol.tiers
+        if self.tiers is not None:
+            validate_hierarchy(self.tiers, m)
+            self.sync_state = init_hier_state(base, self.tiers, seed)
+            self.inter_model_bytes = (
+                self.model_size * self.tiers.inter.bytes_per_param)
+            self.num_links = m + self.tiers.num_clusters
+        else:
+            self.sync_state = ops.init_state(base, seed)
+            self.inter_model_bytes = 0
+            self.num_links = m
 
         # network environment: link profile + peer overlay. A static
         # topology is built once here (concrete matrix closed over by the
@@ -109,6 +142,7 @@ class DecentralizedLearner:
         # the round counter. The gossip operator needs SOME overlay — an
         # ideal network means the implied star.
         self._link_bw = self._link_lat = None
+        self._agg_bw = self._agg_lat = None
         self._static_adj = None
         self._mobile = False
         if network is not None:
@@ -116,6 +150,9 @@ class DecentralizedLearner:
             self._mobile = net_topology.is_mobile(network)
             if not self._mobile:
                 self._static_adj = net_topology.adjacency(network, m)
+            if self.tiers is not None:
+                self._agg_bw, self._agg_lat = net_cost.uniform_profile(
+                    self.tiers.link_class, self.tiers.num_clusters)
         elif protocol.kind == "gossip":
             self._static_adj = net_topology.star(m)
 
@@ -127,6 +164,18 @@ class DecentralizedLearner:
         self.network_time = 0.0                    # simulated seconds
         self.active_rounds_total = 0               # sum of per-round |active|
         self.link_xfer_totals = np.zeros((m,), np.int64)
+        # the bytes ledger: int64 cumulative bytes per link (learner links,
+        # then aggregator uplinks under a hierarchy) — exact even when the
+        # tiers move different payload sizes. Pricing happens host-side:
+        # per-link payload sizes × device-side transfer counts.
+        self.link_bytes_totals = np.zeros((self.num_links,), np.int64)
+        self.msg_bytes = network.msg_bytes if network is not None else 64
+        self.link_payload_bytes = np.full((m,), self.model_bytes, np.int64)
+        if self.tiers is not None:
+            self.link_payload_bytes = np.concatenate([
+                self.link_payload_bytes,
+                np.full((self.tiers.num_clusters,), self.inter_model_bytes,
+                        np.int64)])
 
         self._step = jax.jit(self._make_step())
         self._chunk = jax.jit(self._make_chunk())
@@ -135,11 +184,14 @@ class DecentralizedLearner:
     def _make_step(self):
         loss_fn, opt = self.loss_fn, self.opt
         proto, weights = self.protocol, self.sample_weights
+        tiers = self.tiers
         track_div = self.track_divergence
         m, net = self.m, self.network
         model_bytes = self.model_bytes
+        inter_model_bytes = self.inter_model_bytes
         static_adj, mobile = self._static_adj, self._mobile
         bw, lat = self._link_bw, self._link_lat
+        agg_bw, agg_lat = self._agg_bw, self._agg_lat
         # full availability needs no mask at all — the operators then follow
         # the pre-network code path, bitwise
         sample_masks = net is not None and not net.full_availability
@@ -154,25 +206,60 @@ class DecentralizedLearner:
             # local SGD step; unavailable ones just cannot communicate
             params, opt_state, losses = jax.vmap(local_update)(
                 params, opt_state, batches)
-            t = sync_state.step                       # this round's index
+            t = (sync_state.step if tiers is None
+                 else sync_state.inter.step)          # this round's index
             active = (net_availability.sample(net, m, t)
                       if sample_masks else None)
-            adj = (net_topology.adjacency(net, m, t) if mobile
-                   else static_adj)
-            params, sync_state, rec, xfers = ops.apply_operator(
-                proto, params, sync_state, weights, active=active,
-                adjacency=adj)
+            if tiers is None:
+                adj = (net_topology.adjacency(net, m, t) if mobile
+                       else static_adj)
+                res = ops.apply_staged(
+                    proto, params, sync_state, weights, active=active,
+                    adjacency=adj)
+                params, sync_state, rec = res.params, res.state, res.rec
+                xfers = res.xfers
+                # the ledger's inputs: transfer + message counts per link
+                # (priced into bytes host-side, in int64)
+                link_counts = jnp.stack([xfers, res.link_msgs], axis=-1)
+                if net is not None:
+                    act = (active if active is not None
+                           else jnp.ones((m,), bool))
+                    net_time = net_cost.round_network_time(
+                        xfers, act, rec.messages, model_bytes, bw, lat)
+                else:
+                    net_time = jnp.float32(0.0)
+            else:
+                hres = apply_hierarchical(
+                    proto, tiers, params, sync_state, weights, active)
+                params, sync_state, rec = hres.params, hres.state, hres.rec
+                xfers = hres.member_xfers
+                link_counts = jnp.stack([
+                    jnp.concatenate([hres.member_xfers, hres.agg_xfers]),
+                    jnp.concatenate([hres.member_msgs, hres.agg_msgs]),
+                ], axis=-1)
+                if net is not None:
+                    act = (active if active is not None
+                           else jnp.ones((m,), bool))
+                    g = tiers.num_clusters
+                    agg_act = jnp.any(act.reshape(g, -1), axis=1)
+                    # the round's network time is the two tiers back to
+                    # back: members sync with their aggregator, then the
+                    # aggregators with the top coordinator
+                    net_time = (
+                        net_cost.round_network_time(
+                            hres.member_xfers, act,
+                            jnp.sum(hres.member_msgs), model_bytes, bw, lat)
+                        + net_cost.round_network_time(
+                            hres.agg_xfers, agg_act,
+                            jnp.sum(hres.agg_msgs), inter_model_bytes,
+                            agg_bw, agg_lat))
+                else:
+                    net_time = jnp.float32(0.0)
             div = divergence(params) if track_div else jnp.zeros(())
             num_active = (jnp.sum(active).astype(jnp.int32)
                           if active is not None else jnp.int32(m))
-            if net is not None:
-                act = active if active is not None else jnp.ones((m,), bool)
-                net_time = net_cost.round_network_time(
-                    xfers, act, rec.messages, model_bytes, bw, lat)
-            else:
-                net_time = jnp.float32(0.0)
             return params, opt_state, sync_state, ProtocolMetrics(
-                losses, rec, div, num_active, net_time, xfers)
+                losses, rec, div, num_active, net_time, xfers, link_counts)
 
         return step
 
@@ -212,6 +299,8 @@ class DecentralizedLearner:
         self.network_time += float(metrics.net_time)
         self.active_rounds_total += int(metrics.num_active)
         self.link_xfer_totals += np.asarray(metrics.link_xfers, np.int64)
+        self.link_bytes_totals += self.price_link_counts(
+            np.asarray(metrics.link_counts, np.int64))
         return metrics
 
     # ------------------------------------------------------------------
@@ -243,7 +332,18 @@ class DecentralizedLearner:
         self.active_rounds_total += int(jnp.sum(metrics.num_active))
         self.link_xfer_totals += np.asarray(
             jnp.sum(metrics.link_xfers, axis=0), np.int64)
+        self.link_bytes_totals += self.price_link_counts(
+            np.asarray(metrics.link_counts, np.int64).sum(axis=0))
         return metrics
+
+    # ------------------------------------------------------------------
+    def price_link_counts(self, counts: np.ndarray) -> np.ndarray:
+        """(..., L, 2) int64 [transfers, messages] -> (..., L) int64 bytes:
+        each link's tier payload size times its transfers, plus the control
+        messages it sent — exact host-side int64 math, immune to the
+        billion-parameter payload sizes that would overflow device int32."""
+        return (counts[..., 0] * self.link_payload_bytes
+                + counts[..., 1] * self.msg_bytes)
 
     # ------------------------------------------------------------------
     def comm_bytes_of(self, totals, msg_bytes: Optional[int] = None) -> int:
@@ -258,14 +358,31 @@ class DecentralizedLearner:
         )
 
     def comm_bytes(self, msg_bytes: Optional[int] = None) -> int:
-        """Cumulative communication in bytes (paper's c(f) accounting)."""
+        """Cumulative communication in bytes (paper's c(f) accounting).
+
+        Under a hierarchy the tiers move different payload sizes, so the
+        scalar ``transfers × model_bytes`` formula no longer applies — the
+        total is the bytes ledger's sum (exact; ``msg_bytes`` overrides are
+        ignored because the configured size is already priced in)."""
+        if self.tiers is not None:
+            return int(self.link_bytes_totals.sum())
         return self.comm_bytes_of(self.comm_totals, msg_bytes)
 
     def per_link_bytes(self) -> np.ndarray:
-        """(m,) cumulative model bytes each learner's link carried (the
-        per-link breakdown of ``comm_bytes``; control messages stay in the
-        global accounting)."""
-        return self.link_xfer_totals * self.model_bytes
+        """The bytes ledger: (L,) cumulative int64 bytes each link carried
+        — model payloads at that link's tier payload size PLUS the control
+        messages the link sent (violation notices on violators' links,
+        poll requests on polled members' links). Rows ``0..m-1`` are the
+        learner links; under a hierarchy rows ``m..m+g-1`` are the
+        aggregator↔top-coordinator uplinks.
+
+        For coordinator protocols (periodic/fedavg/dynamic, flat or
+        hierarchical) ``sum(per_link_bytes()) == comm_bytes()`` — the
+        ledger is the per-link breakdown of the paper's c(f), exact even
+        with per-tier payload sizes. For ``gossip`` every transfer
+        occupies BOTH endpoints' links, so the ledger's sum is exactly
+        ``2 * comm_bytes()`` (link occupancy, not fleet throughput)."""
+        return self.link_bytes_totals.copy()
 
     def mean_active(self) -> float:
         """Average fraction of the fleet reachable per executed round."""
@@ -286,6 +403,11 @@ class DecentralizedLearner:
 # ---------------------------------------------------------------------------
 
 class SerialLearner:
+    """One model, all data — scanned the same way the fleet engine is:
+    ``run_chunk`` rolls n rounds into one ``lax.scan`` program, so
+    benchmarks sweeping the serial reference pay one jitted dispatch per
+    chunk instead of one per round."""
+
     def __init__(self, loss_fn, init_fn, train: TrainConfig = TrainConfig(),
                  seed: int = 0):
         self.loss_fn = loss_fn
@@ -294,19 +416,45 @@ class SerialLearner:
         self.opt_state = self.opt.init(self.params)
         self.cumulative_loss = 0.0
 
-        @jax.jit
-        def _step(params, opt_state, batch):
+        def _round(params, opt_state, batch):
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
             params, opt_state = self.opt.update(params, grads, opt_state)
             return params, opt_state, loss
 
-        self._step = _step
+        @jax.jit
+        def _chunk(params, opt_state, batches):
+            def body(carry, batch):
+                params, opt_state = carry
+                params, opt_state, loss = _round(params, opt_state, batch)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state), batches)
+            return params, opt_state, losses
+
+        self._step = jax.jit(_round)
+        self._chunk = _chunk
 
     def step(self, batch):
         self.params, self.opt_state, loss = self._step(
             self.params, self.opt_state, batch)
         self.cumulative_loss += float(loss)
         return loss
+
+    def run_chunk(self, batches) -> jnp.ndarray:
+        """n rounds as one compiled program. ``batches``: pytree with
+        leading (n, B, ...) leaves — round t consumes ``batches[t]``.
+        Returns the (n,) per-round losses; numerics are identical to n
+        ``step`` calls (same traced round body, and ``cumulative_loss``
+        accumulates the per-round losses in float64 exactly like the
+        per-round driver), so both the loss curve and the running total
+        match the ``step`` loop bitwise. jit recompiles per distinct chunk
+        length — drive it with a fixed chunk size as ``train.loop`` does."""
+        self.params, self.opt_state, losses = self._chunk(
+            self.params, self.opt_state, batches)
+        for loss in np.asarray(losses):
+            self.cumulative_loss += float(loss)
+        return losses
 
 
 def make_protocol(kind: str, **kw) -> ProtocolConfig:

@@ -1,0 +1,24 @@
+"""The staged sync kernel: sigma decomposed into reusable stages.
+
+Every synchronization operator is a composition of four stages
+(``repro.core.sync.stages``):
+
+    trigger  -> cohort  -> aggregate -> commit
+    (fire?)     (who)      (what)       (apply + account)
+
+``kernel.py`` assembles the paper's operators (periodic/fedavg/dynamic/
+gossip/nosync) from those stages behind the unchanged ``apply_operator``
+signature — bitwise-identical to the pre-kernel monoliths — and exposes
+the richer ``apply_staged`` entry the engine uses (adds the per-link
+control-message counts that feed the bytes ledger). ``hierarchy.py``
+composes two kernel instances into the two-tier star-of-stars
+coordinator (``HierarchyConfig``).
+"""
+from repro.core.sync import hierarchy, kernel, stages  # noqa: F401
+from repro.core.sync.hierarchy import (  # noqa: F401
+    HierResult, HierSyncState, apply_hierarchical, init_hier_state,
+)
+from repro.core.sync.kernel import (  # noqa: F401
+    OPERATORS, CommRecord, StageResult, SyncState, apply_operator,
+    apply_staged, init_state,
+)

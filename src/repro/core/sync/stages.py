@@ -1,0 +1,235 @@
+"""Stage library: the four phases every synchronization operator shares.
+
+A round of any operator factors into
+
+* **trigger**   — should the sync machinery run at all? (cadence ``t % b``,
+                  and for sigma_Delta the divergence condition)
+* **cohort**    — WHO participates: everyone reachable, a random
+                  C-fraction, the balancing augmentation's growing set, or
+                  a neighborhood mixing matrix — all availability-masked
+* **aggregate** — WHAT they agree on: masked (weighted) mean, or one
+                  Metropolis–Hastings mixing step
+* **commit**    — APPLY and ACCOUNT: per-learner select, reference /
+                  violation-counter updates, CommRecord math, per-link
+                  transfer and control-message counts (the bytes ledger's
+                  inputs)
+
+The functions here are the single implementation of each concern; the
+operator compositions in ``kernel.py`` wire them together. Arithmetic is
+kept expression-for-expression identical to the pre-kernel monoliths so
+compositions reproduce the PR-2 engine bitwise (pinned by
+``tests/golden_pr2_engine.json``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ProtocolConfig
+from repro.core.divergence import (
+    per_learner_sq_distance, tree_mean, tree_weighted_mean,
+)
+
+
+# ---------------------------------------------------------------------------
+# shared pytree helpers
+# ---------------------------------------------------------------------------
+
+def num_learners(stacked) -> int:
+    return jax.tree.leaves(stacked)[0].shape[0]
+
+
+def zeros_i32(m: int) -> jnp.ndarray:
+    return jnp.zeros((m,), jnp.int32)
+
+
+def tree_select(mask, new, old):
+    """Per-learner select: leaf (m, ...) <- new where mask[i] else old."""
+    def sel(n, o):
+        m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def broadcast_model(model, m: int):
+    """Replicate a single-model pytree along a fresh leading learner axis."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape),
+                        model)
+
+
+# ---------------------------------------------------------------------------
+# trigger
+# ---------------------------------------------------------------------------
+
+def cadence_fire(cfg: ProtocolConfig, t) -> jnp.ndarray:
+    """The schedule half of every trigger: sync machinery runs when
+    ``t % b == 0``."""
+    return (t % cfg.b) == 0
+
+
+def divergence_trigger(cfg: ProtocolConfig, stacked, ref, reach):
+    """sigma_Delta's condition half: which reachable learners violate
+    ``||f_i - r||^2 > Delta``. Returns ``(dists, violated, nviol)`` — the
+    distances double as the balancing cohort's augmentation priority."""
+    dists = per_learner_sq_distance(stacked, ref)
+    violated = (dists > cfg.delta) & reach
+    return dists, violated, jnp.sum(violated).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# cohort
+# ---------------------------------------------------------------------------
+
+def cohort_all(m: int, active: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """sigma_b's cohort: every reachable learner."""
+    return jnp.ones((m,), bool) if active is None else active
+
+
+def cohort_fraction_ideal(sub, m: int, k: int) -> jnp.ndarray:
+    """FedAvg's cohort on an ideal network: a uniform random k-subset."""
+    perm = jax.random.permutation(sub, m)
+    return jnp.zeros((m,), bool).at[perm[:k]].set(True)
+
+
+def cohort_fraction_masked(sub, m: int, k: int, active) -> jnp.ndarray:
+    """FedAvg's cohort under availability: rank the reachable learners by
+    a fresh uniform draw and take the first min(k, |active|) — the same
+    C-fraction target, restricted to whoever answered this round."""
+    r = jax.random.uniform(sub, (m,))
+    ranks = jnp.argsort(jnp.argsort(jnp.where(active, r, -jnp.inf)))
+    return (ranks >= m - jnp.minimum(k, jnp.sum(active))) & active
+
+
+def cohort_balanced(cfg: ProtocolConfig, stacked, ref, violated, rng,
+                    weights=None, reach=None):
+    """sigma_Delta's cohort: coordinator balancing. Augment the violator
+    set B until the partial average re-enters the safe zone
+    ``||mean_B - r||^2 <= Delta`` or B covers every REACHABLE learner
+    (B = [m] on an ideal network).
+
+    This is the one stage where cohort and aggregate iterate together —
+    each augmentation step re-aggregates to test the safe zone — so it
+    returns both ``(mask B, mean_B)``. The caller derives poll counts from
+    the mask: it is the single source of truth for who the coordinator
+    contacted.
+    """
+    m = num_learners(stacked)
+    if reach is None:
+        reach = jnp.ones((m,), bool)
+    dists = per_learner_sq_distance(stacked, ref)     # (m,) — augment priority
+
+    if cfg.augmentation == "random":
+        prio = jax.random.uniform(rng, (m,))
+    elif cfg.augmentation == "max_distance":
+        prio = dists
+    else:  # "all": jump straight to full sync on any violation
+        prio = jnp.full((m,), jnp.inf)
+
+    def mean_dist(mask):
+        mean = aggregate_mean(stacked, mask, weights)
+        d = sum(
+            jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
+            for a, b in zip(jax.tree.leaves(mean), jax.tree.leaves(ref)))
+        return mean, d
+
+    if cfg.augmentation == "all":
+        mean = aggregate_mean(stacked, reach, weights)
+        return reach, mean
+
+    _, d0 = mean_dist(violated)
+
+    def cond(carry):
+        mask, d = carry
+        return jnp.logical_and(jnp.any(reach & ~mask), d > cfg.delta)
+
+    def body(carry):
+        mask, _ = carry
+        cand = jnp.where(mask | ~reach, -jnp.inf, prio)
+        nxt = jnp.argmax(cand)
+        mask = mask.at[nxt].set(True)
+        _, d = mean_dist(mask)
+        return mask, d
+
+    mask, _ = jax.lax.while_loop(cond, body, (violated, d0))
+    mean = aggregate_mean(stacked, mask, weights)
+    return mask, mean
+
+
+def cohort_neighborhood(m: int, active: Optional[jnp.ndarray], adjacency):
+    """Gossip's cohort: the availability-masked peer overlay plus its
+    Metropolis–Hastings mixing matrix
+        W_ij = 1 / (1 + max(deg_i, deg_j))   for active edges i~j
+        W_ii = 1 - sum_j W_ij
+    which is doubly stochastic for a symmetric adjacency, so the
+    configuration mean is preserved. Unreachable (or isolated) learners
+    have W row e_i and keep their model bitwise. Returns ``(A, W)``."""
+    act = jnp.ones((m,), bool) if active is None else active
+    A = (jnp.asarray(adjacency, bool) & act[None, :] & act[:, None]
+         & ~jnp.eye(m, dtype=bool))
+    deg = jnp.sum(A, axis=1).astype(jnp.float32)
+    W = jnp.where(A, 1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :])),
+                  0.0)
+    W = W + jnp.diag(1.0 - jnp.sum(W, axis=1))
+    return A, W
+
+
+# ---------------------------------------------------------------------------
+# aggregate
+# ---------------------------------------------------------------------------
+
+def aggregate_mean(stacked, mask, weights=None):
+    """Mean of the masked subset of learners (optionally B^i-weighted).
+    An empty mask yields the zero model (``tree_weighted_mean`` guards the
+    0/0) — commits keep the previous configuration via their selects."""
+    w = mask.astype(jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    return tree_weighted_mean(stacked, w)
+
+
+def aggregate_mean_ideal(stacked, m: int, weights=None):
+    """The ideal-network (no-mask) aggregate: ``tree_mean`` unweighted —
+    the exact expression the pre-network engine used, preserved for the
+    bitwise regression — or the all-ones weighted mean."""
+    if weights is None:
+        return tree_mean(stacked)
+    return aggregate_mean(stacked, jnp.ones((m,), bool), weights)
+
+
+def aggregate_mix(stacked, W):
+    """One mixing step: every learner's model becomes its W-row combination
+    of the neighborhood's models."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(W.astype(x.dtype), x, axes=1), stacked)
+
+
+# ---------------------------------------------------------------------------
+# commit
+# ---------------------------------------------------------------------------
+
+def commit_select(stacked, mask, mean):
+    """Cohort members adopt the aggregate; everyone else keeps their model."""
+    m = num_learners(stacked)
+    return tree_select(mask, broadcast_model(mean, m), stacked)
+
+
+def commit_ref_if(moved, mean, ref):
+    """Reference update gated on a scalar condition (``periodic``/``fedavg``:
+    anyone averaged; ``dynamic``: the sync covered every reachable
+    learner)."""
+    return jax.tree.map(lambda a, b: jnp.where(moved, a, b), mean, ref)
+
+
+def xfers_cohort(mask) -> jnp.ndarray:
+    """Coordinator-link transfer counts: each cohort member's uplink
+    carries its model up and the aggregate back down (2 per member), so
+    ``sum(xfers) == model_up + model_down``."""
+    return mask.astype(jnp.int32) * 2
+
+
+def xfers_neighborhood(A) -> jnp.ndarray:
+    """Gossip transfer counts: every exchanged model occupies the links of
+    BOTH endpoints, so ``sum(xfers) == 2 * (model_up + model_down)``."""
+    return (2 * jnp.sum(A, axis=1)).astype(jnp.int32)

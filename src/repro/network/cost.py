@@ -19,7 +19,7 @@ from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
-from repro.config import NetworkConfig
+from repro.config import LINK_CLASS_NAMES, NetworkConfig
 
 
 class LinkClass(NamedTuple):
@@ -36,6 +36,12 @@ LINK_CLASSES = {
     "edge":  LinkClass(bandwidth=125e3, latency=0.2),     # 2G fallback
 }
 
+# configs validate names against repro.config.LINK_CLASS_NAMES; keep the
+# two registries in lockstep so config-time validation covers exactly the
+# classes this cost model can price
+assert set(LINK_CLASSES) == set(LINK_CLASS_NAMES), (
+    sorted(LINK_CLASSES), sorted(LINK_CLASS_NAMES))
+
 
 def link_profile(net: NetworkConfig, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-learner ``(bandwidth, latency)`` float32 arrays, classes from
@@ -49,6 +55,18 @@ def link_profile(net: NetworkConfig, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     bw = jnp.asarray([c.bandwidth for c in classes], jnp.float32)
     lat = jnp.asarray([c.latency for c in classes], jnp.float32)
     return bw, lat
+
+
+def uniform_profile(link_class: str, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(bandwidth, latency) arrays for ``n`` links of one class — the
+    aggregator↔coordinator uplink tier of a hierarchy
+    (``HierarchyConfig.link_class``)."""
+    if link_class not in LINK_CLASSES:
+        raise KeyError(
+            f"unknown link class {link_class!r}; known: {sorted(LINK_CLASSES)}")
+    c = LINK_CLASSES[link_class]
+    return (jnp.full((n,), c.bandwidth, jnp.float32),
+            jnp.full((n,), c.latency, jnp.float32))
 
 
 def round_network_time(xfers, active, messages, model_bytes: int,

@@ -118,6 +118,7 @@ def run_protocol_training(
         base_loss = dl.cumulative_loss
         base_totals = dict(dl.comm_totals)
         base_net_time = dl.network_time
+        base_ledger = int(dl.link_bytes_totals.sum())
         metrics = dl.run_chunk(streams.next_chunk(
             n, on_round=on_round if drifting else None))
 
@@ -127,6 +128,12 @@ def run_protocol_training(
         comm_cum = {k: base_totals[k] + np.cumsum(
             np.asarray(getattr(metrics.comm, k), np.int64))
             for k in ops.CommRecord._fields}
+        # under a hierarchy the tiers move different payload sizes, so the
+        # byte curve comes from the per-round ledger (link counts priced
+        # host-side at each link's payload size), not the scalar counts
+        ledger_cum = base_ledger + np.cumsum(
+            dl.price_link_counts(
+                np.asarray(metrics.link_counts, np.int64)).sum(axis=1))
         net_cum = base_net_time + np.cumsum(
             np.asarray(metrics.net_time, np.float64))
         for i in range(n):
@@ -134,8 +141,10 @@ def run_protocol_training(
             if (g + 1) % record_every == 0 or g == rounds - 1:
                 traj.rounds.append(g + 1)
                 traj.cumulative_loss.append(float(loss_cum[i]))
-                traj.cumulative_bytes.append(dl.comm_bytes_of(
-                    {k: int(v[i]) for k, v in comm_cum.items()}))
+                traj.cumulative_bytes.append(
+                    int(ledger_cum[i]) if dl.tiers is not None
+                    else dl.comm_bytes_of(
+                        {k: int(v[i]) for k, v in comm_cum.items()}))
                 traj.syncs.append(int(comm_cum["syncs"][i]))
                 traj.network_time.append(float(net_cum[i]))
         t += n

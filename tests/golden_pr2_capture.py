@@ -1,0 +1,98 @@
+"""Capture the PR-2 engine's numerics as golden values (maintenance tool).
+
+Run ONCE against a known-good engine to (re)generate
+``tests/golden_pr2_engine.json``, the fixture behind the staged-kernel
+bitwise regression in ``tests/test_sync_kernel.py``:
+
+    PYTHONPATH=src python tests/golden_pr2_capture.py
+
+Every case runs 40 scanned rounds of the drift-MLP smoke task through
+``DecentralizedLearner.run_chunk`` and records the comm-counter totals,
+the exact cumulative loss, a SHA-256 over the final parameter bytes, and
+the per-link transfer totals. The staged sync kernel (ISSUE 3) must
+reproduce all of them bitwise with ``tiers=None``.
+"""
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.config import NetworkConfig, ProtocolConfig, TrainConfig, get_arch
+from repro.core.protocol import DecentralizedLearner
+from repro.data.pipeline import LearnerStreams
+from repro.data.synthetic import GraphicalModelStream
+from repro.models.cnn import cnn_loss, init_cnn_params
+
+M, ROUNDS = 6, 40
+
+CASES = {
+    "periodic_ideal": (ProtocolConfig(kind="periodic", b=3), None),
+    "periodic_net": (ProtocolConfig(kind="periodic", b=3),
+                     NetworkConfig(act_prob=0.6, topology="ring",
+                                   link_classes=("wifi", "lte"))),
+    "fedavg_ideal": (ProtocolConfig(kind="fedavg", b=2, fedavg_c=0.5), None),
+    "fedavg_net": (ProtocolConfig(kind="fedavg", b=2, fedavg_c=0.5),
+                   NetworkConfig(act_prob=0.6, topology="ring",
+                                 link_classes=("wifi", "lte"))),
+    "dynamic_ideal": (ProtocolConfig(kind="dynamic", b=2, delta=0.5), None),
+    "dynamic_net": (ProtocolConfig(kind="dynamic", b=2, delta=0.5),
+                    NetworkConfig(act_prob=0.6, topology="ring",
+                                  link_classes=("wifi", "lte"))),
+    "dynamic_weighted_ideal": (
+        ProtocolConfig(kind="dynamic", b=2, delta=0.5, weighted=True), None),
+    "gossip_star_fallback": (ProtocolConfig(kind="gossip", b=2), None),
+    "gossip_net": (ProtocolConfig(kind="gossip", b=2),
+                   NetworkConfig(act_prob=0.8, topology="ring",
+                                 link_classes=("wifi", "lte"))),
+    "nosync_ideal": (ProtocolConfig(kind="nosync"), None),
+}
+
+
+def params_sha256(params) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def run_case(proto, network):
+    cfg = get_arch("drift_mlp", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    init_fn = lambda k: init_cnn_params(cfg, k)
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    weighted = getattr(proto, "weighted", False)
+    streams = LearnerStreams(src, M, batch=10, seed=0,
+                             batch_sizes=[5, 10, 15, 10, 5, 15]
+                             if weighted else None)
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, M, proto,
+        TrainConfig(optimizer="sgd", learning_rate=0.05),
+        sample_weights=streams.weights, network=network)
+    dl.run_chunk(streams.next_chunk(ROUNDS))
+    return {
+        "comm_totals": dl.comm_totals,
+        "cumulative_loss": repr(dl.cumulative_loss),
+        "params_sha256": params_sha256(dl.params),
+        "link_xfer_totals": dl.link_xfer_totals.tolist(),
+        "network_time": repr(dl.network_time),
+    }
+
+
+def main():
+    out = {name: run_case(p, n) for name, (p, n) in CASES.items()}
+    # bitwise goldens are only meaningful against the XLA that produced
+    # them — the regression test skips on other jax versions
+    out["_meta"] = {"jax_version": jax.__version__}
+    path = os.path.join(os.path.dirname(__file__), "golden_pr2_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+    for k in CASES:
+        print(f"  {k}: loss={out[k]['cumulative_loss']} "
+              f"up={out[k]['comm_totals']['model_up']}")
+
+
+if __name__ == "__main__":
+    main()

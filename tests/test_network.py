@@ -416,8 +416,14 @@ def test_dropout_chunk_runs_scanned_and_accounts():
     # per-link accounting consistent with the global counters
     assert (int(np.sum(dl.link_xfer_totals))
             == dl.comm_totals["model_up"] + dl.comm_totals["model_down"])
-    assert (dl.per_link_bytes()
-            == dl.link_xfer_totals * dl.model_bytes).all()
+    # the bytes ledger: model payloads per link PLUS the control messages
+    # each link sent (dynamic's chatter no longer hides in the global
+    # total) — its sum IS the paper's c(f)
+    msg_link_bytes = dl.per_link_bytes() - dl.link_xfer_totals * dl.model_bytes
+    assert (msg_link_bytes >= 0).all()
+    assert (int(np.sum(msg_link_bytes))
+            == dl.comm_totals["messages"] * net.msg_bytes)
+    assert int(np.sum(dl.per_link_bytes())) == dl.comm_bytes()
 
 
 def test_gossip_mobile_geometric_end_to_end():

@@ -1,0 +1,462 @@
+"""Staged sync kernel (ISSUE 3): stage compositions, the bytes ledger,
+and the two-tier hierarchy.
+
+The load-bearing test is the golden regression: with ``tiers=None`` every
+operator (periodic/fedavg/dynamic/gossip/nosync, with and without a
+``NetworkConfig``, weighted and not) must reproduce the PRE-KERNEL engine
+bitwise — comm-counter totals, exact cumulative loss, SHA-256 over the
+final parameter bytes, per-link transfer totals — pinned by
+``tests/golden_pr2_engine.json`` (captured from the PR-2 monoliths;
+regenerate with ``tests/golden_pr2_capture.py`` only against a
+known-good engine).
+"""
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.config import (
+    HierarchyConfig, NetworkConfig, ProtocolConfig, TrainConfig, get_arch,
+)
+from repro.core import operators as ops
+from repro.core.divergence import tree_mean
+from repro.core.sync import hierarchy as hier
+from repro.core.sync import kernel, stages
+from repro.core.protocol import DecentralizedLearner, SerialLearner
+from repro.data.pipeline import LearnerStreams
+from repro.data.synthetic import GraphicalModelStream
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.network import topology
+
+from conftest import make_stacked, tree_allclose
+from golden_pr2_capture import CASES, M, ROUNDS, params_sha256, run_case
+
+
+# ---------------------------------------------------------------------------
+# golden regression: the staged kernel == the PR-2 monoliths, bitwise
+# ---------------------------------------------------------------------------
+
+with open(os.path.join(os.path.dirname(__file__),
+                       "golden_pr2_engine.json")) as f:
+    GOLDEN = json.load(f)
+GOLDEN_JAX = GOLDEN.get("_meta", {}).get("jax_version")
+
+
+@pytest.mark.skipif(
+    jax.__version__ != GOLDEN_JAX,
+    reason=f"bitwise goldens captured under jax {GOLDEN_JAX}; XLA codegen "
+           f"on jax {jax.__version__} need not match bit-for-bit — "
+           f"regenerate with tests/golden_pr2_capture.py to pin this "
+           f"version")
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_staged_kernel_reproduces_pr2_engine_bitwise(name):
+    """ISSUE-3 acceptance: tiers=None + the staged compositions are the
+    PR-2 engine — params SHA-256, comm totals, loss, per-link transfers."""
+    got = run_case(*CASES[name])
+    want = GOLDEN[name]
+    assert got["comm_totals"] == want["comm_totals"], name
+    assert got["cumulative_loss"] == want["cumulative_loss"], name
+    assert got["params_sha256"] == want["params_sha256"], name
+    assert got["link_xfer_totals"] == want["link_xfer_totals"], name
+    assert got["network_time"] == want["network_time"], name
+
+
+def test_apply_operator_signature_unchanged():
+    """The pre-kernel 4-tuple contract survives the decomposition."""
+    stacked = make_stacked(jax.random.PRNGKey(0), 4)
+    state = ops.init_state(tree_mean(stacked))
+    out = ops.apply_operator(ProtocolConfig(kind="periodic", b=1),
+                             stacked, state)
+    assert len(out) == 4
+    new, st2, rec, xfers = out
+    assert isinstance(rec, ops.CommRecord) and xfers.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# xfers / CommRecord invariants through the staged kernel (satellite)
+# ---------------------------------------------------------------------------
+
+ALL_KINDS = ["nosync", "periodic", "fedavg", "dynamic", "gossip"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(kind=st.sampled_from(ALL_KINDS), m=st.integers(2, 8),
+       seed=st.integers(0, 10_000), mask_bits=st.integers(0, 255),
+       weighted=st.booleans())
+def test_xfers_invariant_for_every_staged_operator(kind, m, seed, mask_bits,
+                                                   weighted):
+    """Documented ledger invariants, for EVERY operator through the staged
+    kernel: coordinator links carry up+down (``sum(xfers) ==
+    model_up + model_down``), a gossip transfer occupies BOTH endpoints'
+    links (``== 2*(up+down)``), and the per-link control messages sum to
+    the scalar record (``sum(link_msgs) == messages``)."""
+    stacked = make_stacked(jax.random.PRNGKey(seed), m)
+    active = jnp.asarray([(mask_bits >> i) & 1 == 1 for i in range(m)])
+    kw = dict(b=1)
+    if kind == "dynamic":
+        kw["delta"] = 0.05
+    cfg = ProtocolConfig(kind=kind, weighted=weighted, **kw)
+    weights = jnp.arange(1.0, m + 1.0) if weighted else None
+    adj = topology.ring(m) if kind == "gossip" else None
+    res = ops.apply_staged(cfg, stacked, ops.init_state(tree_mean(stacked),
+                                                        seed),
+                           weights, active=active, adjacency=adj)
+    up, down = int(res.rec.model_up), int(res.rec.model_down)
+    assert up == down
+    assert (np.asarray(res.xfers) >= 0).all()
+    assert (np.asarray(res.link_msgs) >= 0).all()
+    total = int(jnp.sum(res.xfers))
+    assert total == (2 * (up + down) if kind == "gossip" else up + down)
+    assert int(jnp.sum(res.link_msgs)) == int(res.rec.messages)
+    # a learner that moved no models and sent no messages is dark
+    dark = (np.asarray(res.xfers) == 0) & (np.asarray(res.link_msgs) == 0)
+    for i in np.flatnonzero(dark & ~np.asarray(active)):
+        a = jax.tree.map(lambda x: x[i], res.params)
+        b = jax.tree.map(lambda x: x[i], stacked)
+        assert all(np.array_equal(x, y) for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_dynamic_link_msgs_split_violators_and_polls():
+    """Per-link chatter attribution: one notice on each violator's link,
+    one poll on each polled member's link."""
+    m = 6
+    stacked = jax.tree.map(lambda x: x * 0.01,
+                           make_stacked(jax.random.PRNGKey(0), m))
+    ref = tree_mean(stacked)
+    stacked = jax.tree.map(lambda x: x.at[0].set(x[0] + 5.0), stacked)
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=1e-8)
+    res = ops.apply_staged(cfg, stacked, ops.init_state(ref))
+    msgs = np.asarray(res.link_msgs)
+    # learner 0 violated; the balancing loop polled the rest
+    assert msgs[0] == 1 and (msgs[1:] == 1).all()
+    assert int(res.rec.messages) == m
+
+
+# ---------------------------------------------------------------------------
+# stage library units
+# ---------------------------------------------------------------------------
+
+def test_cohort_neighborhood_rows_are_stochastic():
+    m = 6
+    active = jnp.asarray([True, True, False, True, True, True])
+    A, W = stages.cohort_neighborhood(m, active, topology.ring(m))
+    W = np.asarray(W)
+    assert np.allclose(W.sum(axis=1), 1.0, atol=1e-6)
+    assert np.allclose(W.sum(axis=0), 1.0, atol=1e-6)   # doubly stochastic
+    # the inactive learner is isolated: row e_i
+    assert W[2, 2] == 1.0 and np.allclose(np.delete(W[2], 2), 0.0)
+
+
+def test_cohort_fraction_masked_respects_target_and_reach():
+    m, k = 8, 3
+    active = jnp.asarray([True, False, True, True, False, True, True, True])
+    sub = jax.random.PRNGKey(3)
+    mask = stages.cohort_fraction_masked(sub, m, k, active)
+    assert int(mask.sum()) == k
+    assert bool(jnp.all(~mask | active))
+    # fewer reachable than k: take everyone reachable
+    few = jnp.zeros((m,), bool).at[2].set(True)
+    mask2 = stages.cohort_fraction_masked(sub, m, k, few)
+    assert int(mask2.sum()) == 1 and bool(mask2[2])
+
+
+# ---------------------------------------------------------------------------
+# hierarchy: config validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_hierarchy_config_validation():
+    inter = ProtocolConfig(kind="periodic", b=5)
+    with pytest.raises(ValueError):
+        HierarchyConfig(num_clusters=1, inter=inter)
+    with pytest.raises(ValueError):
+        HierarchyConfig(num_clusters=4, inter=ProtocolConfig(kind="gossip"))
+    with pytest.raises(ValueError):   # no nesting
+        HierarchyConfig(num_clusters=4, inter=ProtocolConfig(
+            kind="periodic", tiers=HierarchyConfig(num_clusters=2,
+                                                   inter=inter)))
+    with pytest.raises(KeyError):     # unknown uplink class at config time
+        HierarchyConfig(num_clusters=4, inter=inter,
+                        link_class="quantum-entanglement")
+    with pytest.raises(ValueError):   # gossip cannot be the intra tier
+        ProtocolConfig(kind="gossip",
+                       tiers=HierarchyConfig(num_clusters=2, inter=inter))
+    # a fleet that doesn't partition fails at engine construction
+    cfg = get_arch("drift_mlp", smoke=True)
+    with pytest.raises(ValueError):
+        DecentralizedLearner(
+            lambda p, b: cnn_loss(cfg, p, b),
+            lambda k: init_cnn_params(cfg, k), 7,
+            ProtocolConfig(kind="dynamic", b=2, delta=0.5,
+                           tiers=HierarchyConfig(num_clusters=3,
+                                                 inter=inter)))
+
+
+def test_link_class_typos_fail_at_config_time():
+    with pytest.raises(KeyError):
+        NetworkConfig(link_classes=("warp-drive",))
+
+
+# ---------------------------------------------------------------------------
+# hierarchy: operator-level semantics
+# ---------------------------------------------------------------------------
+
+def _hier_state(stacked, tiers, seed=0):
+    return hier.init_hier_state(tree_mean(stacked), tiers, seed)
+
+
+def test_hierarchical_continuous_equals_flat_continuous():
+    """intra periodic b=1 + inter periodic b=1 on an ideal network is the
+    global mean everywhere — the flat continuous operator (to float
+    tolerance; the hierarchy averages in two hops)."""
+    m, g = 8, 4
+    stacked = jax.tree.map(lambda x: x * 2.0,
+                           make_stacked(jax.random.PRNGKey(1), m))
+    cfg = ProtocolConfig(kind="periodic", b=1,
+                         tiers=HierarchyConfig(
+                             num_clusters=g,
+                             inter=ProtocolConfig(kind="periodic", b=1)))
+    res = hier.apply_hierarchical(cfg, cfg.tiers, stacked,
+                                  _hier_state(stacked, cfg.tiers))
+    mean = tree_mean(stacked)
+    for i in range(m):
+        fi = jax.tree.map(lambda x: x[i], res.params)
+        assert tree_allclose(fi, mean, rtol=1e-5, atol=1e-6)
+    # member links: 2 intra transfers + 1 down-push each; aggregator
+    # uplinks: 2 each
+    assert (np.asarray(res.member_xfers) == 3).all()
+    assert (np.asarray(res.agg_xfers) == 2).all()
+    assert int(res.rec.full_syncs) == 1
+
+
+def test_hierarchy_inter_nosync_keeps_clusters_independent():
+    """With a nosync inter tier, clusters never see each other: each
+    cluster ends at its own mean, no aggregator uplink traffic."""
+    m, g = 6, 2
+    stacked = make_stacked(jax.random.PRNGKey(2), m)
+    cfg = ProtocolConfig(kind="periodic", b=1,
+                         tiers=HierarchyConfig(
+                             num_clusters=g,
+                             inter=ProtocolConfig(kind="nosync")))
+    res = hier.apply_hierarchical(cfg, cfg.tiers, stacked,
+                                  _hier_state(stacked, cfg.tiers))
+    k = m // g
+    for c in range(g):
+        cmean = tree_mean(jax.tree.map(lambda x: x[c * k:(c + 1) * k],
+                                       stacked))
+        for i in range(c * k, (c + 1) * k):
+            fi = jax.tree.map(lambda x: x[i], res.params)
+            assert tree_allclose(fi, cmean, rtol=1e-5, atol=1e-6)
+    assert (np.asarray(res.agg_xfers) == 0).all()
+    assert (np.asarray(res.member_xfers) == 2).all()   # intra only
+
+
+def test_weighted_hierarchy_reaches_weighted_global_mean():
+    """Algorithm-2 mass flows up the hierarchy: with weighted intra tiers
+    the inter tier weights aggregators by their cluster's total B^i, so a
+    full two-hop sync lands on the WEIGHTED global mean (not the
+    unweighted mean of cluster means)."""
+    m, g = 6, 2
+    stacked = make_stacked(jax.random.PRNGKey(9), m)
+    w = jnp.asarray([1.0, 1.0, 1.0, 3.0, 3.0, 3.0])
+    cfg = ProtocolConfig(kind="periodic", b=1, weighted=True,
+                         tiers=HierarchyConfig(
+                             num_clusters=g,
+                             inter=ProtocolConfig(kind="periodic", b=1)))
+    res = hier.apply_hierarchical(cfg, cfg.tiers, stacked,
+                                  _hier_state(stacked, cfg.tiers),
+                                  weights=w)
+    want = jax.tree.map(
+        lambda x: jnp.einsum("m...,m->...", x, w) / jnp.sum(w), stacked)
+    for i in range(m):
+        fi = jax.tree.map(lambda x: x[i], res.params)
+        assert tree_allclose(fi, want, rtol=1e-5, atol=1e-6)
+
+
+def test_gossip_ledger_counts_both_endpoints():
+    """Gossip's ledger is link OCCUPANCY: every transfer sits on both
+    endpoints' links, so the ledger sums to exactly 2x the paper's c(f)
+    (coordinator protocols sum to exactly 1x — see
+    test_flat_engine_ledger_matches_comm_bytes)."""
+    proto = ProtocolConfig(kind="gossip", b=2)
+    net = NetworkConfig(topology="ring")
+    dl, _ = _run_engine(proto, net, rounds=20, m=6)
+    assert dl.comm_bytes() > 0
+    assert int(dl.per_link_bytes().sum()) == 2 * dl.comm_bytes()
+
+
+def test_hierarchy_mean_invariance_full_participation():
+    m, g = 8, 2
+    stacked = jax.tree.map(lambda x: x * 3.0,
+                           make_stacked(jax.random.PRNGKey(3), m))
+    cfg = ProtocolConfig(kind="dynamic", b=1, delta=1e-6,
+                         tiers=HierarchyConfig(
+                             num_clusters=g,
+                             inter=ProtocolConfig(kind="dynamic", b=1,
+                                                  delta=1e-6)))
+    res = hier.apply_hierarchical(cfg, cfg.tiers, stacked,
+                                  _hier_state(stacked, cfg.tiers))
+    assert tree_allclose(tree_mean(stacked), tree_mean(res.params),
+                         rtol=1e-4, atol=1e-5)
+
+
+def test_hierarchy_inactive_members_untouched():
+    m, g = 8, 2
+    stacked = jax.tree.map(lambda x: x * 2.0,
+                           make_stacked(jax.random.PRNGKey(4), m))
+    cfg = ProtocolConfig(kind="periodic", b=1,
+                         tiers=HierarchyConfig(
+                             num_clusters=g,
+                             inter=ProtocolConfig(kind="periodic", b=1)))
+    active = jnp.asarray([True, False, True, True, True, True, False, True])
+    res = hier.apply_hierarchical(cfg, cfg.tiers, stacked,
+                                  _hier_state(stacked, cfg.tiers),
+                                  active=active)
+    for i in np.flatnonzero(~np.asarray(active)):
+        a = jax.tree.map(lambda x: x[i], res.params)
+        b = jax.tree.map(lambda x: x[i], stacked)
+        assert all(np.array_equal(x, y) for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        assert int(res.member_xfers[i]) == 0
+        assert int(res.member_msgs[i]) == 0
+
+
+def test_hierarchy_dark_cluster_is_unreachable_upstream():
+    """A cluster with no reachable member is dark at the inter tier too."""
+    m, g = 6, 3
+    stacked = make_stacked(jax.random.PRNGKey(5), m)
+    cfg = ProtocolConfig(kind="periodic", b=1,
+                         tiers=HierarchyConfig(
+                             num_clusters=g,
+                             inter=ProtocolConfig(kind="periodic", b=1)))
+    active = jnp.asarray([True, True, False, False, True, True])
+    res = hier.apply_hierarchical(cfg, cfg.tiers, stacked,
+                                  _hier_state(stacked, cfg.tiers),
+                                  active=active)
+    assert int(res.agg_xfers[1]) == 0          # cluster 1 fully dark
+    assert int(res.agg_xfers[0]) > 0 and int(res.agg_xfers[2]) > 0
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(res.params))
+
+
+# ---------------------------------------------------------------------------
+# hierarchy: end-to-end inside lax.scan (acceptance)
+# ---------------------------------------------------------------------------
+
+def _mlp_setup():
+    cfg = get_arch("drift_mlp", smoke=True)
+    return (lambda p, b: cnn_loss(cfg, p, b),
+            lambda k: init_cnn_params(cfg, k))
+
+
+def _run_engine(proto, network=None, rounds=40, m=6, seed=0):
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    streams = LearnerStreams(src, m, batch=10, seed=seed)
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, m, proto,
+        TrainConfig(optimizer="sgd", learning_rate=0.05), network=network)
+    metrics = dl.run_chunk(streams.next_chunk(rounds))
+    return dl, metrics
+
+
+def test_two_tier_dynamic_runs_scanned_and_ledger_balances():
+    """ISSUE-3 acceptance: a two-tier dynamic run on a clustered fleet
+    completes via run_chunk and the bytes ledger balances — per-link sums
+    equal the global total."""
+    g = 3
+    proto = ProtocolConfig(
+        kind="dynamic", b=2, delta=0.3,
+        tiers=HierarchyConfig(num_clusters=g,
+                              inter=ProtocolConfig(kind="dynamic", b=4,
+                                                   delta=0.6)))
+    net = NetworkConfig(act_prob=0.8, link_classes=("wifi", "lte"))
+    dl, metrics = _run_engine(proto, net, rounds=40, m=6)
+    n = 40
+    assert metrics.link_counts.shape == (n, 6 + g, 2)
+    assert np.isfinite(dl.cumulative_loss)
+    assert dl.network_time >= 0.0
+    # the ledger balances: per-link sums == the global byte total
+    assert int(dl.per_link_bytes().sum()) == dl.comm_bytes()
+    # member rows carry the intra tier, aggregator rows the inter tier
+    assert dl.per_link_bytes().shape == (6 + g,)
+    assert dl.num_links == 6 + g
+
+
+def test_hierarchy_ideal_network_ledger_balances_too():
+    proto = ProtocolConfig(
+        kind="periodic", b=3,
+        tiers=HierarchyConfig(num_clusters=2,
+                              inter=ProtocolConfig(kind="periodic", b=6)))
+    dl, metrics = _run_engine(proto, None, rounds=24, m=6)
+    assert int(dl.per_link_bytes().sum()) == dl.comm_bytes()
+    assert dl.comm_totals["syncs"] >= 1
+
+
+def test_hierarchy_quantized_backhaul_prices_tiers_separately():
+    """inter.bytes_per_param=1 (a quantized uplink) must be priced exactly:
+    aggregator rows move 4x fewer bytes per transfer than member rows."""
+    proto = ProtocolConfig(
+        kind="periodic", b=2,
+        tiers=HierarchyConfig(num_clusters=2,
+                              inter=ProtocolConfig(kind="periodic", b=2,
+                                                   bytes_per_param=1)))
+    dl, metrics = _run_engine(proto, None, rounds=8, m=4)
+    assert dl.inter_model_bytes * 4 == dl.model_bytes * 1
+    agg_rows = dl.per_link_bytes()[4:]
+    agg_xfer_total = int(np.asarray(
+        jnp.sum(metrics.link_counts[:, 4:, 0], axis=0)).sum())
+    assert agg_rows.sum() == agg_xfer_total * dl.inter_model_bytes
+    # every aggregator byte is a whole quantized model
+    assert agg_rows.sum() % dl.inter_model_bytes == 0
+    assert agg_rows.sum() > 0
+
+
+def test_ledger_survives_billion_byte_payloads():
+    """Pricing happens host-side in int64: a payload size past int32
+    (bytes_per_param blown up to stand in for a multi-billion-parameter
+    model) must never wrap the ledger negative."""
+    proto = ProtocolConfig(kind="periodic", b=1,
+                           bytes_per_param=200_000_000)
+    dl, _ = _run_engine(proto, None, rounds=2, m=4)
+    assert dl.model_bytes > 2**31                  # would wrap in int32
+    assert (dl.per_link_bytes() > 0).all()
+    # periodic b=1: 2 transfers per link per round, 2 rounds, no messages
+    assert (dl.per_link_bytes() == 4 * dl.model_bytes).all()
+    assert int(dl.per_link_bytes().sum()) == dl.comm_bytes()
+
+
+def test_flat_engine_ledger_matches_comm_bytes():
+    """tiers=None: the ledger's sum is exactly the paper's c(f)."""
+    proto = ProtocolConfig(kind="dynamic", b=2, delta=0.5)
+    net = NetworkConfig(act_prob=0.6, topology="ring",
+                        link_classes=("wifi", "lte"))
+    dl, _ = _run_engine(proto, net, rounds=40, m=6)
+    assert int(dl.per_link_bytes().sum()) == dl.comm_bytes()
+
+
+# ---------------------------------------------------------------------------
+# serial baseline scanned (satellite)
+# ---------------------------------------------------------------------------
+
+def test_serial_run_chunk_matches_step_loop_bitwise():
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    key = jax.random.PRNGKey(11)
+    batches = [src.sample(jax.random.fold_in(key, t), 16) for t in range(12)]
+
+    tc = TrainConfig(optimizer="sgd", learning_rate=0.05)
+    a = SerialLearner(loss_fn, init_fn, tc)
+    per_round = [float(a.step(b)) for b in batches]
+    b = SerialLearner(loss_fn, init_fn, tc)
+    losses = b.run_chunk(jax.tree.map(lambda *xs: jnp.stack(xs), *batches))
+    assert losses.shape == (12,)
+    assert [float(x) for x in losses] == per_round
+    assert all(np.array_equal(x, y) for x, y in
+               zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)))
+    # the running total accumulates in float64 exactly like the step loop
+    assert a.cumulative_loss == b.cumulative_loss
