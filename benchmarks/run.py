@@ -1,12 +1,19 @@
 """Benchmark orchestrator: one benchmark per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--list]
+    PYTHONPATH=src python -m benchmarks.run --protocol spec.json
 
 Prints one CSV block per benchmark plus a summary line
 ``name,seconds,claim_check`` and persists per-benchmark JSON under
 experiments/bench/. ``--list`` enumerates the registered benchmarks
 (name + paper reference) without running anything — the registry contract
 CI and humans can check cheaply.
+
+``--protocol`` runs an ARBITRARY serialized ``ProtocolSpec`` (the JSON
+written by ``ProtocolSpec.to_json`` / saved next to checkpoints) through
+the scan driver on the drift-MLP task and reports loss / communication —
+new stage compositions are benchmarkable without writing a fig module.
+Combine with ``--full`` for paper-scale rounds.
 """
 from __future__ import annotations
 
@@ -49,6 +56,43 @@ ALL = [
 ]
 
 
+def run_protocol_spec(path: str, full: bool = False, m: int = 8,
+                      seed: int = 0) -> dict:
+    """Drive one serialized ``ProtocolSpec`` through the scanned engine
+    (drift-MLP smoke task) and report loss/communication."""
+    from repro.config import TrainConfig, get_arch
+    from repro.core.sync.spec import ProtocolSpec
+    from repro.data.synthetic import GraphicalModelStream
+    from repro.models.cnn import cnn_loss, init_cnn_params
+    from repro.train.loop import run_protocol_training
+
+    spec = ProtocolSpec.from_file(path)
+    rounds = 2000 if full else 200
+    cfg = get_arch("drift_mlp", smoke=True)
+    dl, traj = run_protocol_training(
+        lambda p, b: cnn_loss(cfg, p, b),
+        lambda k: init_cnn_params(cfg, k),
+        GraphicalModelStream(seed=0, drift_prob=0.0),
+        m=m, rounds=rounds, protocol=spec,
+        train=TrainConfig(optimizer="sgd", learning_rate=0.05),
+        batch=10, seed=seed, record_every=max(1, rounds // 10))
+    row = {
+        "spec": spec.to_dict(),
+        "m": m,
+        "rounds": rounds,
+        "cumulative_loss": dl.cumulative_loss,
+        "mean_round_loss": dl.cumulative_loss / (rounds * m),
+        "syncs": dl.comm_totals["syncs"],
+        "full_syncs": dl.comm_totals["full_syncs"],
+        "model_up": dl.comm_totals["model_up"],
+        "messages": dl.comm_totals["messages"],
+        "comm_bytes": dl.comm_bytes(),
+        "loss_curve": traj.cumulative_loss,
+        "bytes_curve": traj.cumulative_bytes,
+    }
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -56,11 +100,28 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--list", action="store_true",
                     help="enumerate registered benchmarks and exit")
+    ap.add_argument("--protocol", default=None, metavar="SPEC_JSON",
+                    help="run a serialized ProtocolSpec through the scan "
+                         "driver and report loss/comm")
     args = ap.parse_args()
 
     if args.list:
         for mod in ALL:
             print(f"{mod.NAME}\t{mod.PAPER_REF}")
+        return
+
+    if args.protocol:
+        import re
+        from benchmarks.common import save_rows
+        t0 = time.time()
+        row = run_protocol_spec(args.protocol, full=args.full)
+        name = re.sub(r"[^\w.-]", "_", row["spec"]["name"]) or "custom"
+        print(f"=== protocol_spec  [{args.protocol}] ===")
+        for k, v in row.items():
+            if not isinstance(v, (list, dict)):
+                print(f"  {k}={v}")
+        path = save_rows(f"protocol_spec_{name}", [row])
+        print(f"  -> saved {path} ({time.time() - t0:.1f}s)")
         return
 
     summary = []

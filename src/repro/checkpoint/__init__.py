@@ -1,1 +1,4 @@
-from repro.checkpoint.io import save_pytree, load_pytree, save_protocol_state, load_protocol_state  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    load_protocol_spec, load_protocol_state, load_protocol_tiers,
+    load_pytree, save_protocol_state, save_pytree,
+)

@@ -79,11 +79,24 @@ def load_pytree(path: str):
 
 
 def _sync_dict(sync_state) -> dict:
-    return {"ref": sync_state.ref, "v": sync_state.v,
-            "rng": sync_state.rng, "step": sync_state.step}
+    d = {"ref": sync_state.ref, "v": sync_state.v,
+         "rng": sync_state.rng, "step": sync_state.step}
+    # trigger-declared extra carried state (e.g. staleness counters);
+    # an empty dict contributes no leaves and round-trips as absence
+    if sync_state.extra:
+        d["extra"] = dict(sync_state.extra)
+    return d
 
 
-def save_protocol_state(path: str, params, opt_state, sync_state) -> None:
+def save_protocol_state(path: str, params, opt_state, sync_state,
+                        protocol=None) -> None:
+    """Persist a run. ``protocol`` (a ``ProtocolConfig`` or
+    ``ProtocolSpec``) additionally writes ``<path>.spec.json`` — the
+    serialized ``ProtocolSpec`` — so a restore reconstructs the exact
+    protocol, not just its state. A hierarchical config
+    (``ProtocolConfig.tiers``) writes an extended sidecar
+    ``{"spec": <intra>, "tiers": {"num_clusters", "link_class",
+    "inter": <spec>}}`` so the tier structure survives too."""
     from repro.core.sync.hierarchy import HierSyncState
     save_pytree(path + ".params.npz", params)
     save_pytree(path + ".opt.npz", opt_state)
@@ -95,11 +108,30 @@ def save_protocol_state(path: str, params, opt_state, sync_state) -> None:
         })
     else:
         save_pytree(path + ".sync.npz", _sync_dict(sync_state))
+    if protocol is not None:
+        import json
+
+        from repro.core.sync.spec import resolve_spec
+        tiers = getattr(protocol, "tiers", None)
+        if tiers is None:
+            blob = resolve_spec(protocol).to_json()
+        else:
+            blob = json.dumps({
+                "spec": resolve_spec(protocol).to_dict(),
+                "tiers": {
+                    "num_clusters": tiers.num_clusters,
+                    "link_class": tiers.link_class,
+                    "inter": resolve_spec(tiers.inter).to_dict(),
+                },
+            }, indent=1, sort_keys=True)
+        with open(path + ".spec.json", "w") as f:
+            f.write(blob)
 
 
 def _sync_state(d):
     from repro.core.operators import SyncState
-    return SyncState(ref=d["ref"], v=d["v"], rng=d["rng"], step=d["step"])
+    return SyncState(ref=d["ref"], v=d["v"], rng=d["rng"], step=d["step"],
+                     extra=d.get("extra", {}))
 
 
 def load_protocol_state(path: str):
@@ -113,3 +145,38 @@ def load_protocol_state(path: str):
     else:
         state = _sync_state(sync)
     return params, opt, state
+
+
+def load_protocol_spec(path: str):
+    """The flat (or intra-tier) ``ProtocolSpec`` saved next to a
+    checkpoint, or None for checkpoints written before the spec API
+    (callers then fall back to their own config). For a hierarchical
+    checkpoint this is the INTRA spec; the tier structure lives in the
+    sidecar's ``tiers`` block (``load_protocol_tiers``)."""
+    from repro.core.sync.spec import ProtocolSpec
+    d = _read_sidecar(path)
+    if d is None:
+        return None
+    return ProtocolSpec.from_dict(d.get("spec", d))
+
+
+def load_protocol_tiers(path: str):
+    """The hierarchy block of a checkpoint's spec sidecar —
+    ``{"num_clusters", "link_class", "inter": <inter ProtocolSpec>}`` —
+    or None for flat checkpoints."""
+    from repro.core.sync.spec import ProtocolSpec
+    d = _read_sidecar(path)
+    if d is None or "tiers" not in d:
+        return None
+    tiers = dict(d["tiers"])
+    tiers["inter"] = ProtocolSpec.from_dict(tiers["inter"])
+    return tiers
+
+
+def _read_sidecar(path: str):
+    import json
+    spec_path = path + ".spec.json"
+    if not os.path.exists(spec_path):
+        return None
+    with open(spec_path) as f:
+        return json.load(f)

@@ -282,22 +282,29 @@ class ProtocolConfig:
     tiers: Optional[HierarchyConfig] = None   # two-tier hierarchy on top
 
     def __post_init__(self):
-        assert self.kind in (
-            PROTO_NOSYNC, PROTO_PERIODIC, PROTO_CONTINUOUS,
-            PROTO_FEDAVG, PROTO_DYNAMIC, PROTO_GOSSIP,
-        ), self.kind
-        assert self.b >= 1
-        assert 0.0 < self.fedavg_c <= 1.0, self.fedavg_c
-        # delta is only read by sigma_Delta; a nosync/periodic config must
-        # not be rejected over a field it never uses
-        if self.kind == PROTO_DYNAMIC:
-            assert self.delta > 0
-        if self.tiers is not None and self.kind == PROTO_GOSSIP:
+        if self.b < 1:
+            raise ValueError(f"sync period b must be >= 1, got {self.b!r}")
+        if not 0.0 < self.fedavg_c <= 1.0:
             raise ValueError(
-                "gossip cannot be the intra-tier operator of a hierarchy: "
-                "it averages over the peer overlay, but a cluster's members "
+                f"fedavg_c must be in (0, 1], got {self.fedavg_c!r}")
+        # resolving against the protocol preset registry validates the
+        # kind (unknown kinds raise with the known list — registering a
+        # new protocol makes it a valid kind) and the parameters the
+        # preset's stages consume: delta > 0 rejects a dynamic config but
+        # never a periodic one, which doesn't read it
+        spec = self._spec()
+        if self.tiers is not None and not spec.uses_coordinator:
+            raise ValueError(
+                f"{self.kind} cannot be the intra-tier operator of a "
+                "hierarchy: it has no coordinator — a cluster's members "
                 "talk to their edge aggregator over uplinks. Use a "
-                "coordinator operator (periodic/fedavg/dynamic) per tier.")
+                "coordinator protocol (periodic/fedavg/dynamic) per tier.")
+
+    def _spec(self):
+        """The ``ProtocolSpec`` this config resolves to (its preset with
+        this config's parameter fields overlaid)."""
+        from repro.core.sync.spec import resolve_spec
+        return resolve_spec(self)
 
 
 @dataclass(frozen=True)
@@ -328,11 +335,12 @@ class HierarchyConfig:
             raise ValueError(
                 f"a hierarchy needs >= 2 clusters, got {self.num_clusters} "
                 "(one cluster is just the flat protocol — drop tiers=)")
-        if self.inter.kind == PROTO_GOSSIP:
+        if not self.inter._spec().uses_coordinator:
             raise ValueError(
-                "the inter-tier operator cannot be gossip: edge aggregators "
-                "talk to the top coordinator over a star of uplinks, not a "
-                "peer overlay. Use periodic/fedavg/dynamic/nosync.")
+                f"the inter-tier operator cannot be {self.inter.kind}: "
+                "edge aggregators talk to the top coordinator over a star "
+                "of uplinks, not a peer overlay. Use a coordinator "
+                "protocol (periodic/fedavg/dynamic/nosync).")
         if self.inter.tiers is not None:
             raise ValueError(
                 "hierarchies do not nest: tiers.inter must have tiers=None "

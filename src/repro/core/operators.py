@@ -1,12 +1,12 @@
 """Synchronization operators sigma — compatibility shim.
 
-The monolithic operators moved into the staged sync kernel
-(``repro.core.sync``): every operator is now a composition of
-trigger → cohort → aggregate → commit stages (see
-``repro.core.sync.stages`` for the stage library and
-``repro.core.sync.kernel`` for the compositions). This module keeps the
-historical import surface — ``from repro.core import operators as ops`` —
-pointing at the kernel; numerics are bitwise-identical to the pre-kernel
+The monolithic operators became declarative stage compositions
+(``repro.core.sync``): the ``PROTOCOLS`` preset registry holds each kind
+as a ``ProtocolSpec`` over the registered stage library (see
+``repro.core.sync.registry`` for the registries, ``spec.py`` for the spec
+API and ``kernel.py`` for the presets). This module keeps the historical
+import surface — ``from repro.core import operators as ops`` — pointing
+at the kernel; numerics are bitwise-identical to the pre-kernel
 monoliths (pinned by ``tests/golden_pr2_engine.json``).
 
 Contracts (unchanged):
@@ -20,6 +20,8 @@ Contracts (unchanged):
     pre-network engine's numerics bitwise.
 """
 from repro.core.sync.kernel import (  # noqa: F401
-    OPERATORS, CommRecord, StageResult, SyncState, apply_operator,
-    apply_staged, dynamic, fedavg, gossip, init_state, nosync, periodic,
+    OPERATORS, PROTOCOLS, CommRecord, StageResult, SyncState,
+    apply_operator, apply_staged, dynamic, fedavg, gossip, init_state,
+    nosync, periodic, register_protocol,
 )
+from repro.core.sync.spec import ProtocolSpec, resolve_spec  # noqa: F401

@@ -21,10 +21,15 @@ round's transfers into simulated wall-clock (``net_time``) and per-link
 bytes. ``network=None`` is the ideal always-on star and reproduces the
 pre-network engine bitwise.
 
-Synchronization runs through the staged sync kernel (``repro.core.sync``),
-which also supplies the per-round **bytes ledger**: every link's exact byte
-count (model payloads at that link's tier payload size + control messages
-attributed to the link that sent them), accumulated host-side in int64.
+Synchronization runs through the staged sync kernel (``repro.core.sync``):
+the protocol argument — a ``ProtocolConfig`` (sugar for a ``PROTOCOLS``
+preset) or a ``ProtocolSpec`` directly — resolves to a compiled stage
+composition, and the spec's capabilities (``uses_overlay``,
+``uses_coordinator``, ``extra_state``) drive the engine's wiring instead
+of kind strings. The kernel also supplies the per-round **bytes ledger**:
+every link's exact byte count (model payloads at that link's tier payload
+size + control messages attributed to the link that sent them),
+accumulated host-side in int64.
 With ``ProtocolConfig.tiers`` (a ``HierarchyConfig``) the round becomes the
 two-tier star-of-stars: the configured protocol runs inside each cluster,
 ``tiers.inter`` runs among the edge aggregators, and the ledger grows g
@@ -46,6 +51,7 @@ from repro.core.divergence import divergence, flat_size
 from repro.core.sync.hierarchy import (
     apply_hierarchical, init_hier_state, validate_hierarchy,
 )
+from repro.core.sync.spec import resolve_spec
 from repro.network import availability as net_availability
 from repro.network import cost as net_cost
 from repro.network import topology as net_topology
@@ -68,14 +74,19 @@ class ProtocolMetrics(NamedTuple):
 
 
 class DecentralizedLearner:
-    """m local learners + a synchronization protocol Pi = (phi, sigma)."""
+    """m local learners + a synchronization protocol Pi = (phi, sigma).
+
+    ``protocol`` is a ``ProtocolConfig`` (kind sugar resolving to a
+    ``PROTOCOLS`` preset) or a ``ProtocolSpec`` directly — any registered
+    stage composition, e.g. one loaded from JSON, runs through the same
+    scanned engine."""
 
     def __init__(
         self,
         loss_fn: Callable[[Any, Any], jnp.ndarray],
         init_fn: Callable[[jax.Array], Any],
         m: int,
-        protocol: ProtocolConfig,
+        protocol,
         train: TrainConfig = TrainConfig(),
         seed: int = 0,
         init_heterogeneity: float = 0.0,
@@ -85,6 +96,10 @@ class DecentralizedLearner:
     ):
         self.m = m
         self.protocol = protocol
+        # the engine consumes the protocol as a spec: a ProtocolConfig is
+        # sugar for its PROTOCOLS preset, and a ProtocolSpec (e.g. loaded
+        # from JSON, or a custom registered composition) runs directly
+        self.spec = resolve_spec(protocol)
         self.train = train
         self.loss_fn = loss_fn
         self.opt = make_optimizer(train)
@@ -119,28 +134,32 @@ class DecentralizedLearner:
         self.opt_state = jax.vmap(self.opt.init)(self.params)
         self.sample_weights = sample_weights
         self.model_size = flat_size(base)
-        self.model_bytes = self.model_size * protocol.bytes_per_param
+        self.model_bytes = self.model_size * self.spec.bytes_per_param
 
         # two-tier hierarchy (ProtocolConfig.tiers): per-cluster intra
         # state + inter-tier state; aggregator uplinks get their own
         # ledger rows and payload size (tiers.inter.bytes_per_param)
-        self.tiers = protocol.tiers
+        self.tiers = getattr(protocol, "tiers", None)
         if self.tiers is not None:
             validate_hierarchy(self.tiers, m)
-            self.sync_state = init_hier_state(base, self.tiers, seed)
+            self.sync_state = init_hier_state(
+                base, self.tiers, seed, m=m, intra_spec=self.spec,
+                inter_spec=resolve_spec(self.tiers.inter))
             self.inter_model_bytes = (
                 self.model_size * self.tiers.inter.bytes_per_param)
             self.num_links = m + self.tiers.num_clusters
         else:
-            self.sync_state = ops.init_state(base, seed)
+            self.sync_state = ops.init_state(base, seed, spec=self.spec,
+                                             m=m)
             self.inter_model_bytes = 0
             self.num_links = m
 
         # network environment: link profile + peer overlay. A static
         # topology is built once here (concrete matrix closed over by the
         # jitted round); a mobile one is re-derived per scanned round from
-        # the round counter. The gossip operator needs SOME overlay — an
-        # ideal network means the implied star.
+        # the round counter. An overlay-using spec (``uses_overlay``, e.g.
+        # gossip) needs SOME overlay — an ideal network means the implied
+        # star.
         self._link_bw = self._link_lat = None
         self._agg_bw = self._agg_lat = None
         self._static_adj = None
@@ -153,7 +172,7 @@ class DecentralizedLearner:
             if self.tiers is not None:
                 self._agg_bw, self._agg_lat = net_cost.uniform_profile(
                     self.tiers.link_class, self.tiers.num_clusters)
-        elif protocol.kind == "gossip":
+        elif self.spec.uses_overlay:
             self._static_adj = net_topology.star(m)
 
         # cumulative counters (host-side python ints / floats)
@@ -184,6 +203,7 @@ class DecentralizedLearner:
     def _make_step(self):
         loss_fn, opt = self.loss_fn, self.opt
         proto, weights = self.protocol, self.sample_weights
+        spec = self.spec
         tiers = self.tiers
         track_div = self.track_divergence
         m, net = self.m, self.network
@@ -214,7 +234,7 @@ class DecentralizedLearner:
                 adj = (net_topology.adjacency(net, m, t) if mobile
                        else static_adj)
                 res = ops.apply_staged(
-                    proto, params, sync_state, weights, active=active,
+                    spec, params, sync_state, weights, active=active,
                     adjacency=adj)
                 params, sync_state, rec = res.params, res.state, res.rec
                 xfers = res.xfers

@@ -1,24 +1,33 @@
-"""The staged sync kernel: sigma decomposed into reusable stages.
+"""The staged sync kernel: protocols as declarative stage compositions.
 
-Every synchronization operator is a composition of four stages
-(``repro.core.sync.stages``):
+Every synchronization operator is a composition of four registered stages
+(``repro.core.sync.registry`` + ``repro.core.sync.stages``):
 
     trigger  -> cohort  -> aggregate -> commit
     (fire?)     (who)      (what)       (apply + account)
 
-``kernel.py`` assembles the paper's operators (periodic/fedavg/dynamic/
-gossip/nosync) from those stages behind the unchanged ``apply_operator``
-signature — bitwise-identical to the pre-kernel monoliths — and exposes
-the richer ``apply_staged`` entry the engine uses (adds the per-link
-control-message counts that feed the bytes ledger). ``hierarchy.py``
-composes two kernel instances into the two-tier star-of-stars
-coordinator (``HierarchyConfig``).
+A ``ProtocolSpec`` (``spec.py``) names one stage per slot, validates the
+composition at construction, serializes to/from JSON, and compiles to the
+scanned round the engine runs. The six built-in kinds are presets in the
+``PROTOCOLS`` registry (``kernel.py``) — ``ProtocolConfig(kind=...)`` is
+sugar resolving onto them, bitwise-identical to the pre-spec monoliths —
+and new protocols register stages + a spec with zero kernel/engine edits
+(``staleness.py`` is the worked example: bounded-staleness sync, preset
+``"stale"``). ``hierarchy.py`` composes two compiled protocols into the
+two-tier star-of-stars coordinator (``HierarchyConfig``).
 """
-from repro.core.sync import hierarchy, kernel, stages  # noqa: F401
+from repro.core.sync import hierarchy, kernel, registry, spec, stages  # noqa: F401,E501
+from repro.core.sync import staleness  # noqa: F401  (registers "stale")
 from repro.core.sync.hierarchy import (  # noqa: F401
     HierResult, HierSyncState, apply_hierarchical, init_hier_state,
 )
 from repro.core.sync.kernel import (  # noqa: F401
-    OPERATORS, CommRecord, StageResult, SyncState, apply_operator,
-    apply_staged, init_state,
+    OPERATORS, PROTOCOLS, CommRecord, StageResult, SyncState,
+    apply_operator, apply_staged, init_state, register_protocol,
 )
+from repro.core.sync.registry import (  # noqa: F401
+    AGGREGATES, COHORTS, COMMITS, TRIGGERS, register_aggregate,
+    register_cohort, register_commit, register_trigger,
+)
+from repro.core.sync.spec import ProtocolSpec, resolve_spec  # noqa: F401
+from repro.core.sync.staleness import BOUNDED_STALENESS  # noqa: F401

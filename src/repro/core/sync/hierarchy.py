@@ -43,6 +43,7 @@ from repro.core.sync import stages
 from repro.core.sync.kernel import (
     CommRecord, StageResult, SyncState, apply_staged,
 )
+from repro.core.sync.spec import ProtocolSpec, resolve_spec
 
 
 class HierSyncState(NamedTuple):
@@ -71,22 +72,47 @@ def validate_hierarchy(tiers: HierarchyConfig, m: int) -> int:
     return m // g
 
 
-def init_hier_state(base_model, tiers: HierarchyConfig, seed: int = 0
+def init_hier_state(base_model, tiers: HierarchyConfig, seed: int = 0,
+                    m: Optional[int] = None,
+                    intra_spec: Optional[ProtocolSpec] = None,
+                    inter_spec: Optional[ProtocolSpec] = None
                     ) -> HierSyncState:
     """Per-cluster intra states (all clusters start from the shared init)
-    plus one inter-tier state over the aggregators."""
+    plus one inter-tier state over the aggregators. Specs that carry
+    extra state (e.g. bounded-staleness counters) get one instance per
+    cluster at the intra tier (leading (g,) axis, vmapped with the rest
+    of the intra state) and one over the g aggregators at the inter
+    tier; ``m`` is required whenever the intra spec carries any."""
     g = tiers.num_clusters
+
+    def extra_for(spec, n):
+        if spec is None or not spec.extra_state:
+            return {}
+        return spec.init_extra(n)
+
+    intra_extra = {}
+    if intra_spec is not None and intra_spec.extra_state:
+        if m is None:
+            raise ValueError(
+                "init_hier_state needs the fleet size m to build the "
+                f"intra spec's extra state {intra_spec.extra_state}")
+        k = validate_hierarchy(tiers, m)
+        intra_extra = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (g,) + x.shape).copy(),
+            extra_for(intra_spec, k))
     intra = SyncState(
         ref=stages.broadcast_model(base_model, g),
         v=jnp.zeros((g,), jnp.int32),
         rng=jax.random.split(jax.random.PRNGKey(seed ^ 0x417E7), g),
         step=jnp.zeros((g,), jnp.int32),
+        extra=intra_extra,
     )
     inter = SyncState(
         ref=base_model,
         v=jnp.zeros((), jnp.int32),
         rng=jax.random.PRNGKey(seed ^ 0x1A7E2),
         step=jnp.zeros((), jnp.int32),
+        extra=extra_for(inter_spec, g),
     )
     return HierSyncState(intra=intra, inter=inter)
 
@@ -100,7 +126,7 @@ def apply_hierarchical(cfg: ProtocolConfig, tiers: HierarchyConfig,
     m = stages.num_learners(stacked)
     g = tiers.num_clusters
     k = m // g
-    if not cfg.weighted:
+    if not resolve_spec(cfg).param("weighted"):
         # same contract as the flat kernel: Algorithm-2 weights only enter
         # (the aggregator means and the inter tier's cluster weights) when
         # the intra config asks for them

@@ -1,308 +1,158 @@
-"""Operator compositions: the paper's sigmas as staged-kernel pipelines.
+"""The preset table: the paper's sigmas as ``ProtocolSpec`` compositions.
 
-Every operator below is a thin wiring of the stage library
-(``repro.core.sync.stages``): trigger → cohort → aggregate → commit. The
-compositions return a ``StageResult`` whose extra ``link_msgs`` field
-carries the per-link control-message counts (violation notices sent on the
-violators' links, poll requests on the polled members' links), the second
-input of the engine's per-link bytes ledger; ``sum(link_msgs) ==
-CommRecord.messages`` always.
+The six built-in protocol kinds are nothing but specs over the registered
+stage library (``repro.core.sync.stages``), entered into the ``PROTOCOLS``
+registry — ``ProtocolConfig(kind=...)`` is sugar that resolves to the
+preset with the config's parameter fields overlaid
+(``repro.core.sync.spec.resolve_spec``):
+
+  * ``nosync``      — trigger=never (identity)
+  * ``periodic``    — sigma_b: cadence -> all-reachable -> mean -> average
+  * ``continuous``  — sigma_b with b=1, same composition
+  * ``fedavg``      — cadence -> random C-fraction -> mean -> subset
+                      (McMahan et al.)
+  * ``dynamic``     — sigma_Delta: divergence -> balancing augmentation ->
+                      mean -> balancing commit (Algorithm 1 / Algorithm 2)
+  * ``gossip``      — cadence -> neighborhood -> M–H mix -> mix
+                      (coordinator-free, over the network topology)
+
+Every preset compiles through the one generic skeleton in ``spec.py`` and
+is bitwise-identical to the pre-spec monolithic operators
+(``tests/golden_pr2_engine.json`` pins the PR-2 engine). New protocols
+register stages + a spec (see ``repro.core.sync.staleness``) — this
+module and the engine need no edits.
 
 ``apply_operator`` keeps the pre-kernel 4-tuple signature
-``(new_config, new_state, CommRecord, xfers)`` and its numerics are
-bitwise-identical to the monolithic operators it replaced
-(``tests/golden_pr2_engine.json`` pins the PR-2 engine); ``apply_staged``
-is the same dispatch returning the full ``StageResult``.
-
-Implemented operators:
-  * ``nosync``      — identity
-  * ``periodic_b``  — sigma_b: full average every b rounds (b=1: continuous)
-  * ``fedavg``      — sigma_b over a random C-fraction subset (McMahan et al.)
-  * ``dynamic``     — sigma_Delta: local conditions + coordinator balancing
-                      (Algorithm 1), optionally weighted (Algorithm 2)
-  * ``gossip``      — coordinator-free neighborhood averaging over the
-                      network topology (Metropolis–Hastings mixing)
+``(new_config, new_state, CommRecord, xfers)``; ``apply_staged`` is the
+same dispatch returning the full ``StageResult`` (its extra ``link_msgs``
+field carries the per-link control-message counts — violation notices on
+the violators' links, poll requests on the polled members' links — the
+second input of the engine's per-link bytes ledger; ``sum(link_msgs) ==
+CommRecord.messages`` always). Both accept a ``ProtocolConfig`` or a
+``ProtocolSpec``.
 
 Availability (``active``: optional (m,) bool mask from
-``repro.network.availability``): unavailable learners keep training locally
-but cannot communicate — they neither violate, nor get polled, nor receive
-averages, and ``dynamic``'s balancing cohort augments only over reachable
-learners. ``active=None`` is the ideal always-on network and preserves the
-pre-network engine's numerics bitwise.
+``repro.network.availability``): unavailable learners keep training
+locally but cannot communicate — they neither violate, nor get polled,
+nor receive averages. ``active=None`` is the ideal always-on network and
+preserves the pre-network engine's numerics bitwise.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.config import ProtocolConfig
-from repro.core.sync import stages
-
-
-class SyncState(NamedTuple):
-    ref: object          # reference model r (single-model pytree)
-    v: jnp.ndarray       # violation counter (scalar int32)
-    rng: jnp.ndarray     # PRNG key for subsampling / random augmentation
-    step: jnp.ndarray    # round counter t (scalar int32)
+# re-exported shared types (the historical import surface)
+from repro.core.sync.registry import (  # noqa: F401
+    CommRecord, PROTOCOLS, StageResult, SyncState, register_protocol,
+)
+from repro.core.sync.spec import (
+    _CONFIG_PARAM_FIELDS, ProtocolSpec, resolve_spec,
+)
 
 
-class CommRecord(NamedTuple):
-    model_up: jnp.ndarray     # models sent learner -> coordinator
-    model_down: jnp.ndarray   # models sent coordinator -> learner
-    messages: jnp.ndarray     # small control messages (violations, polls)
-    syncs: jnp.ndarray        # 1 if any averaging happened this round
-    full_syncs: jnp.ndarray   # 1 if ALL (reachable) learners were averaged
-
-    @staticmethod
-    def zero():
-        z = jnp.zeros((), jnp.int32)
-        return CommRecord(z, z, z, z, z)
-
-
-class StageResult(NamedTuple):
-    """What one staged round produces: the committed configuration, the
-    carried sync state, the scalar comm record, and the per-link counts
-    (model transfers + control messages) the bytes ledger prices."""
-    params: object
-    state: SyncState
-    rec: CommRecord
-    xfers: jnp.ndarray       # (m,) int32 models crossing each learner's link
-    link_msgs: jnp.ndarray   # (m,) int32 control messages per learner link
-
-
-def init_state(ref_model, seed: int = 0) -> SyncState:
+def init_state(ref_model, seed: int = 0,
+               spec: Optional[ProtocolSpec] = None,
+               m: Optional[int] = None) -> SyncState:
+    """Fresh carried state. ``spec`` + ``m`` build the spec's extra
+    carried state (e.g. the staleness counters); the built-in presets
+    carry none, so plain ``init_state(ref)`` keeps working."""
+    extra = {}
+    if spec is not None and spec.extra_state:
+        if m is None:
+            raise ValueError(
+                f"spec {spec.name or spec.trigger!r} carries extra state "
+                f"{spec.extra_state} — init_state needs the fleet size m")
+        extra = spec.init_extra(m)
     return SyncState(
         ref=ref_model,
-        v=jnp.zeros((), jnp.int32),
+        v=jax.numpy.zeros((), jax.numpy.int32),
         rng=jax.random.PRNGKey(seed),
-        step=jnp.zeros((), jnp.int32),
+        step=jax.numpy.zeros((), jax.numpy.int32),
+        extra=extra,
     )
 
 
 # ---------------------------------------------------------------------------
-# trivial composition
+# the preset table — the ONLY place protocol kinds are enumerated
 # ---------------------------------------------------------------------------
 
-def nosync(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-           active=None, adjacency=None) -> StageResult:
-    m = stages.num_learners(stacked)
-    return StageResult(stacked, state._replace(step=state.step + 1),
-                       CommRecord.zero(), stages.zeros_i32(m),
-                       stages.zeros_i32(m))
-
-
-# ---------------------------------------------------------------------------
-# sigma_b: trigger=cadence, cohort=all-reachable, aggregate=mean
-# ---------------------------------------------------------------------------
-
-def periodic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-             active=None, adjacency=None) -> StageResult:
-    """sigma_b: replace every reachable model by their mean every b rounds."""
-    m = stages.num_learners(stacked)
-    t = state.step + 1
-
-    def sync(_):
-        if active is None:
-            mean = stages.aggregate_mean_ideal(stacked, m, weights)
-            newcfg = stages.broadcast_model(mean, m)
-            rec = CommRecord(
-                model_up=jnp.int32(m), model_down=jnp.int32(m),
-                messages=jnp.int32(0), syncs=jnp.int32(1),
-                full_syncs=jnp.int32(1))
-            return newcfg, mean, rec, jnp.full((m,), 2, jnp.int32)
-        mask = stages.cohort_all(m, active)
-        nsync = jnp.sum(mask).astype(jnp.int32)
-        mean = stages.aggregate_mean(stacked, mask, weights)
-        newcfg = stages.commit_select(stacked, mask, mean)
-        # the reference only moves when somebody was actually averaged
-        new_ref = stages.commit_ref_if(nsync > 0, mean, state.ref)
-        rec = CommRecord(
-            model_up=nsync, model_down=nsync, messages=jnp.int32(0),
-            syncs=(nsync > 0).astype(jnp.int32),
-            # sigma_b always averages every reachable learner
-            full_syncs=(nsync > 0).astype(jnp.int32))
-        return newcfg, new_ref, rec, stages.xfers_cohort(mask)
-
-    def skip(_):
-        return stacked, state.ref, CommRecord.zero(), stages.zeros_i32(m)
-
-    do = stages.cadence_fire(cfg, t)
-    newcfg, ref, rec, xfers = jax.lax.cond(do, sync, skip, None)
-    return StageResult(newcfg, state._replace(ref=ref, step=t), rec, xfers,
-                       stages.zeros_i32(m))
+register_protocol("nosync", ProtocolSpec(name="nosync", trigger="never"))
+register_protocol("periodic", ProtocolSpec(name="periodic",
+                                           trigger="cadence"))
+register_protocol("continuous", ProtocolSpec(name="continuous",
+                                             trigger="cadence"))
+register_protocol("fedavg", ProtocolSpec(name="fedavg", trigger="cadence",
+                                         cohort="fraction",
+                                         commit="subset"))
+register_protocol("dynamic", ProtocolSpec(name="dynamic",
+                                          trigger="divergence",
+                                          cohort="balanced",
+                                          commit="balancing"))
+register_protocol("gossip", ProtocolSpec(name="gossip", trigger="cadence",
+                                         cohort="neighborhood",
+                                         aggregate="mix", commit="mix"))
 
 
 # ---------------------------------------------------------------------------
-# fedavg: trigger=cadence, cohort=random C-fraction, aggregate=mean
+# dispatch
 # ---------------------------------------------------------------------------
 
-def fedavg(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-           active=None, adjacency=None) -> StageResult:
-    """sigma_b on a random subset of ceil(C*m) learners (McMahan et al. '17).
-    Under availability masks the subset is drawn from the REACHABLE
-    learners only (partial client participation)."""
-    m = stages.num_learners(stacked)
-    t = state.step + 1
-    k = max(1, int(round(cfg.fedavg_c * m)))
+def apply_staged(proto, stacked, state: SyncState, weights=None,
+                 active=None, adjacency=None) -> StageResult:
+    """Run one round of the configured protocol (a ``ProtocolConfig`` or a
+    ``ProtocolSpec``), returning the full ``StageResult`` (the engine's
+    entry — per-link control-message counts feed the bytes ledger).
 
-    def sync(rng):
-        rng, sub = jax.random.split(rng)
-        if active is None:
-            mask = stages.cohort_fraction_ideal(sub, m, k)
-            mean = stages.aggregate_mean(stacked, mask, weights)
-            newcfg = stages.commit_select(stacked, mask, mean)
-            rec = CommRecord(
-                model_up=jnp.int32(k), model_down=jnp.int32(k),
-                messages=jnp.int32(0), syncs=jnp.int32(1),
-                full_syncs=jnp.int32(1 if k == m else 0))
-            return newcfg, mean, rec, rng, stages.xfers_cohort(mask)
-        mask = stages.cohort_fraction_masked(sub, m, k, active)
-        nsel = jnp.sum(mask).astype(jnp.int32)
-        mean = stages.aggregate_mean(stacked, mask, weights)
-        newcfg = stages.commit_select(stacked, mask, mean)
-        new_ref = stages.commit_ref_if(nsel > 0, mean, state.ref)
-        rec = CommRecord(
-            model_up=nsel, model_down=nsel, messages=jnp.int32(0),
-            syncs=(nsel > 0).astype(jnp.int32),
-            # full = the subset covered every reachable learner
-            full_syncs=((nsel > 0) & (nsel == jnp.sum(active)))
-            .astype(jnp.int32))
-        return newcfg, new_ref, rec, rng, stages.xfers_cohort(mask)
-
-    def skip(rng):
-        return stacked, state.ref, CommRecord.zero(), rng, stages.zeros_i32(m)
-
-    do = stages.cadence_fire(cfg, t)
-    newcfg, ref, rec, rng, xfers = jax.lax.cond(do, sync, skip, state.rng)
-    return StageResult(newcfg, state._replace(ref=ref, rng=rng, step=t), rec,
-                       xfers, stages.zeros_i32(m))
-
-
-# ---------------------------------------------------------------------------
-# sigma_Delta: trigger=cadence+divergence, cohort=balancing augmentation
-# (Algorithm 1 / Algorithm 2)
-# ---------------------------------------------------------------------------
-
-def dynamic(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-            active=None, adjacency=None) -> StageResult:
-    """sigma_Delta with local conditions and balancing (Algorithm 1; with
-    ``weights`` = B^i it is Algorithm 2 for unbalanced sampling rates).
-    With an ``active`` mask only reachable learners violate, get polled,
-    or receive averages; a "full" sync (reference reset, counter reset)
-    is one that covers every reachable learner."""
-    m = stages.num_learners(stacked)
-    t = state.step + 1
-    reach = jnp.ones((m,), bool) if active is None else active
-
-    def check(args):
-        stacked, state = args
-        _, violated, nviol = stages.divergence_trigger(
-            cfg, stacked, state.ref, reach)
-
-        def no_violation(rng):
-            return (stacked, state.ref, state.v,
-                    CommRecord(jnp.int32(0), jnp.int32(0), jnp.int32(0),
-                               jnp.int32(0), jnp.int32(0)), rng,
-                    stages.zeros_i32(m), stages.zeros_i32(m))
-
-        def violation(rng):
-            rng, sub = jax.random.split(rng)
-            v_new = state.v + nviol
-            # if the counter reaches m, force a sync of every reachable
-            # learner and reset it
-            force_full = v_new >= m
-            base = jnp.where(force_full, reach, violated)
-            v_reset = jnp.where(force_full, jnp.int32(0), v_new)
-            mask, mean = stages.cohort_balanced(
-                cfg, stacked, state.ref, base, sub, weights, reach)
-            full = jnp.all(mask == reach)
-            v_final = jnp.where(full, jnp.int32(0), v_reset)
-            newcfg = stages.commit_select(stacked, mask, mean)
-            # reference model updates only on full sync (Algorithm 1)
-            new_ref = stages.commit_ref_if(full, mean, state.ref)
-            nsync = jnp.sum(mask).astype(jnp.int32)
-            # every member of the final B that did not itself violate was
-            # polled by the coordinator — counting nsync - nviol covers the
-            # balancing loop AND the forced-full path (where the balanced
-            # cohort starts from an all-true mask). Per link that is one
-            # violation notice on each true violator's link and one poll
-            # request on each polled member's link, so the ledger sees the
-            # same chatter the scalar record counts.
-            polls = nsync - nviol
-            link_msgs = (violated.astype(jnp.int32)
-                         + (mask & ~violated).astype(jnp.int32))
-            rec = CommRecord(
-                model_up=nsync,          # violators push + coordinator polls
-                model_down=nsync,        # partial average pushed back to B
-                messages=nviol + polls,  # violation notices + poll requests
-                syncs=jnp.int32(1),
-                full_syncs=full.astype(jnp.int32))
-            return (newcfg, new_ref, v_final, rec, rng,
-                    stages.xfers_cohort(mask), link_msgs)
-
-        newcfg, ref, v, rec, rng, xfers, link_msgs = jax.lax.cond(
-            nviol > 0, violation, no_violation, state.rng)
-        return StageResult(
-            newcfg, state._replace(ref=ref, v=v, rng=rng, step=t), rec,
-            xfers, link_msgs)
-
-    def skip(args):
-        stacked, state = args
-        return StageResult(stacked, state._replace(step=t), CommRecord.zero(),
-                           stages.zeros_i32(m), stages.zeros_i32(m))
-
-    do = stages.cadence_fire(cfg, t)
-    return jax.lax.cond(do, check, skip, (stacked, state))
-
-
-# ---------------------------------------------------------------------------
-# gossip: cohort=masked neighborhood, aggregate=Metropolis–Hastings mix
-# ---------------------------------------------------------------------------
-
-def gossip(cfg: ProtocolConfig, stacked, state: SyncState, weights=None,
-           active=None, adjacency=None) -> StageResult:
-    """Neighborhood averaging over the network topology, no coordinator.
-
-    Every b rounds each reachable learner exchanges models with its
-    reachable neighbors and applies one Metropolis–Hastings mixing step
-    (``stages.cohort_neighborhood``). ``weights`` (Algorithm 2 sample
-    weights) are ignored — there is no coordinator to reweight the
-    average; use a coordinator operator for unbalanced fleets.
+    ``active``: optional (m,) bool reachability mask for this round;
+    ``adjacency``: optional (m, m) bool peer overlay (required by specs
+    with ``uses_overlay``, e.g. gossip).
     """
-    m = stages.num_learners(stacked)
-    t = state.step + 1
-    if adjacency is None:
-        raise ValueError(
-            "gossip needs an adjacency matrix — configure a NetworkConfig "
-            "topology (the engine passes it through)")
-    act = jnp.ones((m,), bool) if active is None else active
-    A, W = stages.cohort_neighborhood(m, active, adjacency)
+    spec = resolve_spec(proto)
+    if not spec.param("weighted"):
+        weights = None
+    return spec.compile()(stacked, state, weights, active=active,
+                          adjacency=adjacency)
 
-    def sync(_):
-        mixed = stages.aggregate_mix(stacked, W)
-        edges = jnp.sum(A).astype(jnp.int32)           # directed count = 2E
-        up = edges // 2
-        na = jnp.sum(act).astype(jnp.int32)
-        rec = CommRecord(
-            model_up=up, model_down=edges - up,         # == up by symmetry
-            messages=jnp.int32(0),
-            syncs=(edges > 0).astype(jnp.int32),
-            # "all reachable averaged": the active subgraph is complete, so
-            # one mixing step couples every reachable learner
-            full_syncs=((edges > 0) & (edges == na * (na - 1)))
-            .astype(jnp.int32))
-        return mixed, rec, stages.xfers_neighborhood(A)
 
-    def skip(_):
-        return stacked, CommRecord.zero(), stages.zeros_i32(m)
+def apply_operator(proto, stacked, state: SyncState, weights=None,
+                   active=None, adjacency=None):
+    """The pre-kernel entry point, signature unchanged: returns
+    ``(new_config, new_state, CommRecord, xfers)``."""
+    res = apply_staged(proto, stacked, state, weights, active=active,
+                       adjacency=adjacency)
+    return res.params, res.state, res.rec, res.xfers
 
-    do = stages.cadence_fire(cfg, t)
-    newcfg, rec, xfers = jax.lax.cond(do, sync, skip, None)
-    return StageResult(newcfg, state._replace(step=t), rec, xfers,
-                       stages.zeros_i32(m))
 
+# ---------------------------------------------------------------------------
+# legacy named operators (compatibility surface): each forces its preset's
+# composition and reads parameters from the passed config
+# ---------------------------------------------------------------------------
+
+def _preset_op(kind: str):
+    def op(cfg, stacked, state: SyncState, weights=None, active=None,
+           adjacency=None) -> StageResult:
+        preset = PROTOCOLS[kind]
+        overrides = {f: getattr(cfg, f) for f in _CONFIG_PARAM_FIELDS
+                     if f in preset.known_params and hasattr(cfg, f)}
+        spec = preset.with_params(**overrides)
+        # pre-spec contract of the NAMED operators: an explicitly passed
+        # ``weights`` is used as-is — the weighted/unweighted gate lives
+        # in ``apply_staged``, not here
+        return spec.compile()(stacked, state, weights, active=active,
+                              adjacency=adjacency)
+    op.__name__ = kind
+    op.__doc__ = (f"The {kind!r} preset as a standalone operator "
+                  f"(weights, when passed, are applied as-is).")
+    return op
+
+
+nosync = _preset_op("nosync")
+periodic = _preset_op("periodic")
+fedavg = _preset_op("fedavg")
+dynamic = _preset_op("dynamic")
+gossip = _preset_op("gossip")
 
 OPERATORS = {
     "nosync": nosync,
@@ -312,28 +162,3 @@ OPERATORS = {
     "dynamic": dynamic,
     "gossip": gossip,
 }
-
-
-def apply_staged(cfg: ProtocolConfig, stacked, state: SyncState,
-                 weights=None, active=None, adjacency=None) -> StageResult:
-    """Dispatch to the configured composition, returning the full
-    ``StageResult`` (the engine's entry — per-link control-message counts
-    feed the bytes ledger).
-
-    ``active``: optional (m,) bool reachability mask for this round;
-    ``adjacency``: optional (m, m) bool peer overlay (required by gossip).
-    """
-    op = OPERATORS[cfg.kind]
-    if not cfg.weighted:
-        weights = None
-    return op(cfg, stacked, state, weights, active=active,
-              adjacency=adjacency)
-
-
-def apply_operator(cfg: ProtocolConfig, stacked, state: SyncState,
-                   weights=None, active=None, adjacency=None):
-    """The pre-kernel entry point, signature unchanged: returns
-    ``(new_config, new_state, CommRecord, xfers)``."""
-    res = apply_staged(cfg, stacked, state, weights, active=active,
-                       adjacency=adjacency)
-    return res.params, res.state, res.rec, res.xfers

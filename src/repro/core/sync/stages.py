@@ -3,7 +3,8 @@
 A round of any operator factors into
 
 * **trigger**   — should the sync machinery run at all? (cadence ``t % b``,
-                  and for sigma_Delta the divergence condition)
+                  sigma_Delta's divergence condition, or the bounded-
+                  staleness counters)
 * **cohort**    — WHO participates: everyone reachable, a random
                   C-fraction, the balancing augmentation's growing set, or
                   a neighborhood mixing matrix — all availability-masked
@@ -14,11 +15,14 @@ A round of any operator factors into
                   transfer and control-message counts (the bytes ledger's
                   inputs)
 
-The functions here are the single implementation of each concern; the
-operator compositions in ``kernel.py`` wire them together. Arithmetic is
-kept expression-for-expression identical to the pre-kernel monoliths so
-compositions reproduce the PR-2 engine bitwise (pinned by
-``tests/golden_pr2_engine.json``).
+The first half of this module is the arithmetic library — pure functions
+of scalars and pytrees, kept expression-for-expression identical to the
+pre-kernel monoliths so any composition of them reproduces the PR-2
+engine bitwise (pinned by ``tests/golden_pr2_engine.json``). The second
+half registers the built-in stages into the named registries
+(``repro.core.sync.registry``) under the contracts a ``ProtocolSpec``
+composes; the six preset protocols in ``kernel.py`` are nothing but
+spec-level wirings of these registrations.
 """
 from __future__ import annotations
 
@@ -27,9 +31,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.config import ProtocolConfig
 from repro.core.divergence import (
     per_learner_sq_distance, tree_mean, tree_weighted_mean,
+)
+from repro.core.sync.registry import (
+    CohortOut, CommRecord, StageCtx, SyncOut, carried_v,
+    register_aggregate, register_cohort, register_commit, register_trigger,
 )
 
 
@@ -60,26 +67,26 @@ def broadcast_model(model, m: int):
 
 
 # ---------------------------------------------------------------------------
-# trigger
+# trigger arithmetic
 # ---------------------------------------------------------------------------
 
-def cadence_fire(cfg: ProtocolConfig, t) -> jnp.ndarray:
+def cadence_fire(b: int, t) -> jnp.ndarray:
     """The schedule half of every trigger: sync machinery runs when
     ``t % b == 0``."""
-    return (t % cfg.b) == 0
+    return (t % b) == 0
 
 
-def divergence_trigger(cfg: ProtocolConfig, stacked, ref, reach):
+def divergence_trigger(delta: float, stacked, ref, reach):
     """sigma_Delta's condition half: which reachable learners violate
     ``||f_i - r||^2 > Delta``. Returns ``(dists, violated, nviol)`` — the
     distances double as the balancing cohort's augmentation priority."""
     dists = per_learner_sq_distance(stacked, ref)
-    violated = (dists > cfg.delta) & reach
+    violated = (dists > delta) & reach
     return dists, violated, jnp.sum(violated).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
-# cohort
+# cohort arithmetic
 # ---------------------------------------------------------------------------
 
 def cohort_all(m: int, active: Optional[jnp.ndarray]) -> jnp.ndarray:
@@ -102,8 +109,8 @@ def cohort_fraction_masked(sub, m: int, k: int, active) -> jnp.ndarray:
     return (ranks >= m - jnp.minimum(k, jnp.sum(active))) & active
 
 
-def cohort_balanced(cfg: ProtocolConfig, stacked, ref, violated, rng,
-                    weights=None, reach=None):
+def cohort_balanced(delta: float, augmentation: str, stacked, ref, violated,
+                    rng, weights=None, reach=None):
     """sigma_Delta's cohort: coordinator balancing. Augment the violator
     set B until the partial average re-enters the safe zone
     ``||mean_B - r||^2 <= Delta`` or B covers every REACHABLE learner
@@ -120,9 +127,9 @@ def cohort_balanced(cfg: ProtocolConfig, stacked, ref, violated, rng,
         reach = jnp.ones((m,), bool)
     dists = per_learner_sq_distance(stacked, ref)     # (m,) — augment priority
 
-    if cfg.augmentation == "random":
+    if augmentation == "random":
         prio = jax.random.uniform(rng, (m,))
-    elif cfg.augmentation == "max_distance":
+    elif augmentation == "max_distance":
         prio = dists
     else:  # "all": jump straight to full sync on any violation
         prio = jnp.full((m,), jnp.inf)
@@ -134,7 +141,7 @@ def cohort_balanced(cfg: ProtocolConfig, stacked, ref, violated, rng,
             for a, b in zip(jax.tree.leaves(mean), jax.tree.leaves(ref)))
         return mean, d
 
-    if cfg.augmentation == "all":
+    if augmentation == "all":
         mean = aggregate_mean(stacked, reach, weights)
         return reach, mean
 
@@ -142,7 +149,7 @@ def cohort_balanced(cfg: ProtocolConfig, stacked, ref, violated, rng,
 
     def cond(carry):
         mask, d = carry
-        return jnp.logical_and(jnp.any(reach & ~mask), d > cfg.delta)
+        return jnp.logical_and(jnp.any(reach & ~mask), d > delta)
 
     def body(carry):
         mask, _ = carry
@@ -176,7 +183,7 @@ def cohort_neighborhood(m: int, active: Optional[jnp.ndarray], adjacency):
 
 
 # ---------------------------------------------------------------------------
-# aggregate
+# aggregate arithmetic
 # ---------------------------------------------------------------------------
 
 def aggregate_mean(stacked, mask, weights=None):
@@ -206,7 +213,7 @@ def aggregate_mix(stacked, W):
 
 
 # ---------------------------------------------------------------------------
-# commit
+# commit arithmetic
 # ---------------------------------------------------------------------------
 
 def commit_select(stacked, mask, mean):
@@ -233,3 +240,253 @@ def xfers_neighborhood(A) -> jnp.ndarray:
     """Gossip transfer counts: every exchanged model occupies the links of
     BOTH endpoints, so ``sum(xfers) == 2 * (model_up + model_down)``."""
     return (2 * jnp.sum(A, axis=1)).astype(jnp.int32)
+
+
+# ===========================================================================
+# registered stages: the built-in entries of the four registries
+# ===========================================================================
+
+def _validate_b(params):
+    b = params["b"]
+    if not (isinstance(b, int) and b >= 1):
+        raise ValueError(f"cadence period b must be an int >= 1, got {b!r}")
+
+
+def _validate_delta(params):
+    _validate_b(params)
+    if not params["delta"] > 0:
+        raise ValueError(
+            f"divergence threshold delta must be > 0, got {params['delta']!r}")
+
+
+def _validate_fraction(params):
+    if not 0.0 < params["fedavg_c"] <= 1.0:
+        raise ValueError(
+            f"fedavg_c must be in (0, 1], got {params['fedavg_c']!r}")
+
+
+def _validate_balanced(params):
+    if params["augmentation"] not in ("max_distance", "random", "all"):
+        raise ValueError(
+            f"augmentation must be max_distance|random|all, "
+            f"got {params['augmentation']!r}")
+    if not params["delta"] > 0:
+        raise ValueError(
+            f"balanced cohort needs delta > 0, got {params['delta']!r}")
+
+
+# ---- triggers -------------------------------------------------------------
+
+@register_trigger("never")
+def trigger_never(ctx: StageCtx):
+    """nosync's trigger: the Python constant False — the compiled round
+    skips the sync machinery entirely (no ``lax.cond`` is traced)."""
+    return False
+
+
+@register_trigger("cadence", params={"b": 1}, validate=_validate_b)
+def trigger_cadence(ctx: StageCtx):
+    """sigma_b's trigger: fire every ``b`` rounds, unconditionally."""
+    return cadence_fire(ctx.params["b"], ctx.t)
+
+
+def _divergence_condition(ctx: StageCtx):
+    _, violated, nviol = divergence_trigger(
+        ctx.params["delta"], ctx.stacked, ctx.state.ref, ctx.reach)
+    return violated, nviol
+
+
+@register_trigger("divergence", condition=_divergence_condition,
+                  params={"b": 1, "delta": 0.5}, validate=_validate_delta)
+def trigger_divergence(ctx: StageCtx):
+    """sigma_Delta's trigger: check every ``b`` rounds (the gate); the
+    condition marks reachable learners with ``||f_i - r||^2 > Delta``."""
+    return cadence_fire(ctx.params["b"], ctx.t)
+
+
+# ---- cohorts --------------------------------------------------------------
+
+@register_cohort("all_reachable", provides=("full-cohort",))
+def cohort_all_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
+    """sigma_b's cohort: every reachable learner; on the ideal network the
+    full fleet (``ideal=True`` keeps the pre-network expressions)."""
+    return CohortOut(mask=cohort_all(ctx.m, ctx.active), rng=rng,
+                     ideal=ctx.active is None)
+
+
+@register_cohort("fraction", provides=("subset",),
+                 params={"fedavg_c": 0.3}, validate=_validate_fraction)
+def cohort_fraction_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
+    """FedAvg's cohort: a random ceil(C*m)-subset, drawn from the
+    REACHABLE learners under availability masks."""
+    k = max(1, int(round(ctx.params["fedavg_c"] * ctx.m)))
+    rng, sub = jax.random.split(rng)
+    if ctx.active is None:
+        mask = cohort_fraction_ideal(sub, ctx.m, k)
+    else:
+        mask = cohort_fraction_masked(sub, ctx.m, k, ctx.active)
+    return CohortOut(mask=mask, rng=rng, aux={"k": k})
+
+
+@register_cohort("balanced", provides=("balance",), needs_condition=True,
+                 params={"delta": 0.5, "augmentation": "max_distance"},
+                 validate=_validate_balanced)
+def cohort_balanced_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
+    """sigma_Delta's cohort: coordinator balancing (Algorithm 1). Owns the
+    violation counter: the hot count accumulates into ``v``, ``v >= m``
+    forces a full sync, and any sync covering every reachable learner
+    resets it."""
+    rng, sub = jax.random.split(rng)
+    v_new = ctx.state.v + nhot
+    # if the counter reaches m, force a sync of every reachable learner
+    # and reset it
+    force_full = v_new >= ctx.m
+    base = jnp.where(force_full, ctx.reach, hot)
+    v_reset = jnp.where(force_full, jnp.int32(0), v_new)
+    mask, _ = cohort_balanced(
+        ctx.params["delta"], ctx.params["augmentation"], ctx.stacked,
+        ctx.state.ref, base, sub, ctx.weights, ctx.reach)
+    full = jnp.all(mask == ctx.reach)
+    v_final = jnp.where(full, jnp.int32(0), v_reset)
+    return CohortOut(mask=mask, rng=rng, v=v_final, full=full)
+
+
+@register_cohort("neighborhood", provides=("mixing",), uses_overlay=True,
+                 uses_coordinator=False)
+def cohort_neighborhood_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
+    """Gossip's cohort: the availability-masked peer overlay and its
+    Metropolis–Hastings mixing matrix. No coordinator."""
+    if ctx.adjacency is None:
+        raise ValueError(
+            "gossip needs an adjacency matrix — configure a NetworkConfig "
+            "topology (the engine passes it through)")
+    A, W = cohort_neighborhood(ctx.m, ctx.active, ctx.adjacency)
+    return CohortOut(mask=cohort_all(ctx.m, ctx.active), rng=rng,
+                     aux={"A": A, "W": W})
+
+
+# ---- aggregates -----------------------------------------------------------
+
+@register_aggregate("mean")
+def aggregate_mean_stage(ctx: StageCtx, cout: CohortOut):
+    """Masked (weighted) mean of the cohort; the full-fleet ideal path
+    (``cout.ideal``) keeps the pre-network ``tree_mean`` expression
+    bitwise."""
+    if cout.ideal:
+        return aggregate_mean_ideal(ctx.stacked, ctx.m, ctx.weights)
+    return aggregate_mean(ctx.stacked, cout.mask, ctx.weights)
+
+
+@register_aggregate("mix", needs=("mixing",))
+def aggregate_mix_stage(ctx: StageCtx, cout: CohortOut):
+    """One Metropolis–Hastings mixing step over the neighborhood."""
+    return aggregate_mix(ctx.stacked, cout.aux["W"])
+
+
+# ---- commits --------------------------------------------------------------
+
+@register_commit("average", needs=("full-cohort",))
+def commit_average(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
+    """sigma_b's commit: every cohort member adopts the aggregate; the
+    reference moves whenever anybody was actually averaged."""
+    m = ctx.m
+    if cout.ideal:
+        newcfg = broadcast_model(mean, m)
+        rec = CommRecord(
+            model_up=jnp.int32(m), model_down=jnp.int32(m),
+            messages=jnp.int32(0), syncs=jnp.int32(1),
+            full_syncs=jnp.int32(1))
+        return SyncOut(newcfg, mean, carried_v(ctx, cout), cout.rng,
+                       ctx.state.extra, rec, jnp.full((m,), 2, jnp.int32),
+                       zeros_i32(m))
+    mask = cout.mask
+    nsync = jnp.sum(mask).astype(jnp.int32)
+    newcfg = commit_select(ctx.stacked, mask, mean)
+    # the reference only moves when somebody was actually averaged
+    new_ref = commit_ref_if(nsync > 0, mean, ctx.state.ref)
+    rec = CommRecord(
+        model_up=nsync, model_down=nsync, messages=jnp.int32(0),
+        syncs=(nsync > 0).astype(jnp.int32),
+        # sigma_b always averages every reachable learner
+        full_syncs=(nsync > 0).astype(jnp.int32))
+    return SyncOut(newcfg, new_ref, carried_v(ctx, cout), cout.rng,
+                   ctx.state.extra, rec, xfers_cohort(mask), zeros_i32(m))
+
+
+@register_commit("subset", needs=("subset",))
+def commit_subset(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
+    """FedAvg's commit: the subset adopts the aggregate; a sync is "full"
+    when the subset covered every reachable learner."""
+    m = ctx.m
+    mask = cout.mask
+    newcfg = commit_select(ctx.stacked, mask, mean)
+    if ctx.active is None:
+        k = cout.aux["k"]
+        rec = CommRecord(
+            model_up=jnp.int32(k), model_down=jnp.int32(k),
+            messages=jnp.int32(0), syncs=jnp.int32(1),
+            full_syncs=jnp.int32(1 if k == m else 0))
+        return SyncOut(newcfg, mean, carried_v(ctx, cout), cout.rng,
+                       ctx.state.extra, rec, xfers_cohort(mask),
+                       zeros_i32(m))
+    nsel = jnp.sum(mask).astype(jnp.int32)
+    new_ref = commit_ref_if(nsel > 0, mean, ctx.state.ref)
+    rec = CommRecord(
+        model_up=nsel, model_down=nsel, messages=jnp.int32(0),
+        syncs=(nsel > 0).astype(jnp.int32),
+        # full = the subset covered every reachable learner
+        full_syncs=((nsel > 0) & (nsel == jnp.sum(ctx.active)))
+        .astype(jnp.int32))
+    return SyncOut(newcfg, new_ref, carried_v(ctx, cout), cout.rng,
+                   ctx.state.extra, rec, xfers_cohort(mask), zeros_i32(m))
+
+
+@register_commit("balancing", needs=("balance",), needs_condition=True)
+def commit_balancing(ctx: StageCtx, cout: CohortOut, mean, hot,
+                     nhot) -> SyncOut:
+    """sigma_Delta's commit: the balanced cohort adopts the partial
+    average, the reference moves only on a full sync (Algorithm 1), and
+    the per-link chatter is attributed to the links that sent it."""
+    mask, full = cout.mask, cout.full
+    newcfg = commit_select(ctx.stacked, mask, mean)
+    # reference model updates only on full sync (Algorithm 1)
+    new_ref = commit_ref_if(full, mean, ctx.state.ref)
+    nsync = jnp.sum(mask).astype(jnp.int32)
+    # every member of the final B that did not itself violate was polled
+    # by the coordinator — counting nsync - nhot covers the balancing loop
+    # AND the forced-full path (where the balanced cohort starts from an
+    # all-true mask). Per link that is one violation notice on each true
+    # violator's link and one poll request on each polled member's link,
+    # so the ledger sees the same chatter the scalar record counts.
+    polls = nsync - nhot
+    link_msgs = (hot.astype(jnp.int32) + (mask & ~hot).astype(jnp.int32))
+    rec = CommRecord(
+        model_up=nsync,          # violators push + coordinator polls
+        model_down=nsync,        # partial average pushed back to B
+        messages=nhot + polls,   # violation notices + poll requests
+        syncs=jnp.int32(1),
+        full_syncs=full.astype(jnp.int32))
+    return SyncOut(newcfg, new_ref, carried_v(ctx, cout), cout.rng,
+                   ctx.state.extra, rec, xfers_cohort(mask), link_msgs)
+
+
+@register_commit("mix", needs=("mixing",))
+def commit_mix(ctx: StageCtx, cout: CohortOut, mixed, hot, nhot) -> SyncOut:
+    """Gossip's commit: every learner adopts its mixing-row combination;
+    transfers occupy BOTH endpoints' links; the reference never moves
+    (there is no coordinator to hold one)."""
+    A = cout.aux["A"]
+    edges = jnp.sum(A).astype(jnp.int32)           # directed count = 2E
+    up = edges // 2
+    na = jnp.sum(cout.mask).astype(jnp.int32)
+    rec = CommRecord(
+        model_up=up, model_down=edges - up,         # == up by symmetry
+        messages=jnp.int32(0),
+        syncs=(edges > 0).astype(jnp.int32),
+        # "all reachable averaged": the active subgraph is complete, so
+        # one mixing step couples every reachable learner
+        full_syncs=((edges > 0) & (edges == na * (na - 1)))
+        .astype(jnp.int32))
+    return SyncOut(mixed, ctx.state.ref, carried_v(ctx, cout), cout.rng,
+                   ctx.state.extra, rec, xfers_neighborhood(A),
+                   zeros_i32(ctx.m))

@@ -1,0 +1,97 @@
+"""Bounded-staleness synchronization — the spec API's worked example.
+
+The first ROADMAP async open item, landed WITHOUT touching ``kernel.py``
+or the engine: one registered trigger plus a spec, composed with the
+existing cohort/aggregate/commit stages.
+
+Each learner carries a staleness counter s_i — completed rounds since it
+last participated in a sync — threaded through ``SyncState.extra`` inside
+the scanned round and accumulated against the availability mask: every
+round ages every learner by one, a sync commit resets exactly the cohort
+members (the committed mask), and only REACHABLE learners can raise the
+alarm. The trigger's condition marks ``hot = reach & (s + 1 >= tau)``:
+the sync machinery runs the moment any reachable learner has gone ``tau``
+rounds unsynchronized — learners that were dark past their deadline
+trigger it the round they reappear. Between alarms the fleet is silent,
+so communication adapts to availability instead of a lockstep cadence.
+
+``BOUNDED_STALENESS`` composes the trigger with the all-reachable cohort
+(everyone reachable averages when anyone is too stale); it is registered
+as preset ``"stale"``, so ``ProtocolConfig(kind="stale")`` works like any
+built-in kind — hierarchies included. The trigger composes with the other
+cohort families too: ``cohort="fraction", commit="subset"`` is
+staleness-triggered FedAvg, ``cohort="balanced", commit="balancing"``
+runs the coordinator's balancing augmentation off staleness instead of
+divergence.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sync.registry import StageCtx, register_trigger
+from repro.core.sync.spec import ProtocolSpec
+from repro.core.sync.kernel import register_protocol
+from repro.core.sync.stages import _validate_b, cadence_fire
+
+
+def _counters(ctx: StageCtx) -> jnp.ndarray:
+    if "staleness" not in ctx.state.extra:
+        raise ValueError(
+            "the staleness trigger carries per-learner counters in "
+            "SyncState.extra['staleness'] — build the state with "
+            "init_state(ref, seed, spec=spec, m=m) (the engine does this "
+            "automatically)")
+    return ctx.state.extra["staleness"]
+
+
+def _staleness_condition(ctx: StageCtx):
+    age = _counters(ctx) + 1                      # age after this round
+    hot = ctx.reach & (age >= ctx.params["tau"])
+    return hot, jnp.sum(hot).astype(jnp.int32)
+
+
+def _staleness_init(params, m: int):
+    return {"staleness": jnp.zeros((m,), jnp.int32)}
+
+
+def _staleness_commit(ctx: StageCtx, mask):
+    # cohort members synced this round: their counters reset; everyone
+    # else (including dark learners) keeps aging
+    age = _counters(ctx) + 1
+    return {"staleness": jnp.where(mask, jnp.int32(0), age)}
+
+
+def _staleness_skip(ctx: StageCtx):
+    return {"staleness": _counters(ctx) + 1}
+
+
+def _validate(params):
+    _validate_b(params)
+    tau = params["tau"]
+    if not (isinstance(tau, int) and tau >= 1):
+        raise ValueError(f"staleness bound tau must be an int >= 1, "
+                         f"got {tau!r}")
+
+
+@register_trigger("staleness", condition=_staleness_condition,
+                  init_extra=_staleness_init,
+                  commit_extra=_staleness_commit,
+                  skip_extra=_staleness_skip,
+                  params={"b": 1, "tau": 5}, validate=_validate)
+def trigger_staleness(ctx: StageCtx):
+    """Gate: check every ``b`` rounds (b=1: every round); the condition
+    fires when any reachable learner's rounds-since-last-sync reach
+    ``tau``."""
+    return cadence_fire(ctx.params["b"], ctx.t)
+
+
+# b=1 is PINNED: the staleness condition must be checked every round or
+# alarms land late. Pinned preset params win over the ProtocolConfig
+# sugar's field overlay (whose b default is 10), so kind="stale" behaves
+# identically to running this spec directly; tau (and b) are tuned via
+# BOUNDED_STALENESS.with_params(...).
+BOUNDED_STALENESS = ProtocolSpec(
+    name="stale", trigger="staleness", cohort="all_reachable",
+    aggregate="mean", commit="average", params={"b": 1})
+
+register_protocol("stale", BOUNDED_STALENESS)

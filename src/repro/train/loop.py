@@ -18,7 +18,7 @@ from typing import Callable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import NetworkConfig, ProtocolConfig, TrainConfig
+from repro.config import NetworkConfig, TrainConfig
 from repro.core import operators as ops
 from repro.core.protocol import DecentralizedLearner
 from repro.data.pipeline import LearnerStreams
@@ -85,7 +85,7 @@ def run_protocol_training(
     source,
     m: int,
     rounds: int,
-    protocol: ProtocolConfig,
+    protocol,   # ProtocolConfig sugar or a ProtocolSpec composition
     train: TrainConfig = TrainConfig(),
     batch: int = 10,
     seed: int = 0,

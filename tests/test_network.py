@@ -456,12 +456,20 @@ def test_loop_threads_network_and_records_sim_time():
 # ---------------------------------------------------------------------------
 
 def test_protocol_config_validation():
-    with pytest.raises(AssertionError):
+    """Construction-time validation raises ValueError (not assert, which
+    vanishes under ``python -O``), matching HierarchyConfig's style."""
+    with pytest.raises(ValueError):
         ProtocolConfig(kind="fedavg", fedavg_c=0.0)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         ProtocolConfig(kind="fedavg", fedavg_c=1.5)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         ProtocolConfig(kind="dynamic", delta=0.0)
+    with pytest.raises(ValueError):
+        ProtocolConfig(kind="periodic", b=0)
+    with pytest.raises(ValueError):
+        ProtocolConfig(kind="dynamic", augmentation="telepathy")
+    with pytest.raises(KeyError):     # unknown kind names the known ones
+        ProtocolConfig(kind="psychic")
     # delta is dynamic-only: a periodic/nosync config must not be rejected
     # over a field it never reads
     ProtocolConfig(kind="periodic", delta=0.0)

@@ -1,0 +1,459 @@
+"""The protocol-spec API (ISSUE 4): stage registries, ProtocolSpec,
+preset bitwise-equivalence, serialization round-trips, and the
+bounded-staleness protocol defined purely through the registry.
+
+Two load-bearing groups:
+
+* ``test_registry_self_check`` is the fast CI gate (wired into
+  ``.github/workflows/ci.yml``): every ``PROTOCOLS`` preset constructs,
+  compiles, serializes, and stage-name collisions are loud.
+* ``test_preset_spec_equals_kind_dispatch_bitwise`` pins that running a
+  resolved ``ProtocolSpec`` DIRECTLY through the engine reproduces the
+  PR-2 goldens — the same fixture the legacy ``kind`` dispatch is pinned
+  against — so sugar and spec paths are interchangeable bit for bit.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.config import (
+    HierarchyConfig, NetworkConfig, ProtocolConfig, TrainConfig, get_arch,
+)
+from repro.core import operators as ops
+from repro.core.divergence import tree_mean
+from repro.core.protocol import DecentralizedLearner
+from repro.core.sync import (
+    AGGREGATES, BOUNDED_STALENESS, COHORTS, COMMITS, PROTOCOLS, TRIGGERS,
+    ProtocolSpec, register_trigger, resolve_spec,
+)
+from repro.data.pipeline import LearnerStreams
+from repro.data.synthetic import GraphicalModelStream
+from repro.models.cnn import cnn_loss, init_cnn_params
+
+from conftest import make_stacked
+from golden_pr2_capture import CASES, M, ROUNDS, params_sha256
+
+BUILTIN_KINDS = ("nosync", "periodic", "continuous", "fedavg", "dynamic",
+                 "gossip")
+
+
+# ---------------------------------------------------------------------------
+# registry self-check (the fast CI gate)
+# ---------------------------------------------------------------------------
+
+def test_registry_self_check():
+    """Every preset constructs, compiles, serializes; capabilities are
+    sane; all six built-in kinds resolve to presets."""
+    assert set(BUILTIN_KINDS) <= set(PROTOCOLS)
+    for name, spec in PROTOCOLS.items():
+        assert isinstance(spec, ProtocolSpec), name
+        assert callable(spec.compile()), name
+        back = ProtocolSpec.from_json(spec.to_json())
+        assert back == spec, name
+        assert isinstance(spec.uses_overlay, bool)
+        assert isinstance(spec.uses_coordinator, bool)
+    assert PROTOCOLS["gossip"].uses_overlay
+    assert not PROTOCOLS["gossip"].uses_coordinator
+    for kind in ("periodic", "fedavg", "dynamic", "nosync", "stale"):
+        assert PROTOCOLS[kind].uses_coordinator, kind
+        assert not PROTOCOLS[kind].uses_overlay, kind
+    # the registries themselves are populated with the documented stages
+    assert {"never", "cadence", "divergence", "staleness"} <= set(TRIGGERS)
+    assert {"all_reachable", "fraction", "balanced",
+            "neighborhood"} <= set(COHORTS)
+    assert {"mean", "mix"} <= set(AGGREGATES)
+    assert {"average", "subset", "balancing", "mix"} <= set(COMMITS)
+
+
+def test_stage_name_collisions_are_loud():
+    with pytest.raises(ValueError, match="already registered"):
+        register_trigger("cadence")(lambda ctx: True)
+    from repro.core.sync import register_protocol
+    with pytest.raises(ValueError, match="already registered"):
+        register_protocol("dynamic", PROTOCOLS["dynamic"])
+
+
+def test_unknown_stage_names_raise_at_construction():
+    with pytest.raises(KeyError, match="unknown trigger"):
+        ProtocolSpec(trigger="full-moon")
+    with pytest.raises(KeyError, match="unknown cohort"):
+        ProtocolSpec(trigger="cadence", cohort="everyone-and-their-dog")
+    with pytest.raises(KeyError, match="unknown aggregate"):
+        ProtocolSpec(trigger="cadence", aggregate="median")
+    with pytest.raises(KeyError, match="unknown commit"):
+        ProtocolSpec(trigger="cadence", commit="yolo")
+
+
+def test_invalid_combos_raise_at_construction():
+    # balancing machinery needs a conditional trigger (hot learners)
+    with pytest.raises(ValueError, match="conditional"):
+        ProtocolSpec(trigger="cadence", cohort="balanced",
+                     commit="balancing")
+    # the mixing aggregate needs the neighborhood cohort's matrices
+    with pytest.raises(ValueError, match="mixing"):
+        ProtocolSpec(trigger="cadence", aggregate="mix")
+    with pytest.raises(ValueError, match="mixing"):
+        ProtocolSpec(trigger="cadence", commit="mix")
+    # commit families are tied to their cohort's labels
+    with pytest.raises(ValueError, match="subset"):
+        ProtocolSpec(trigger="cadence", commit="subset")
+    # unknown params are typos, not silently-ignored knobs
+    with pytest.raises(ValueError, match="not consumed"):
+        ProtocolSpec(trigger="cadence", params={"tau": 3})
+    # stage param validation happens at construction, not trace time
+    with pytest.raises(ValueError, match="delta"):
+        ProtocolSpec(trigger="divergence", cohort="balanced",
+                     commit="balancing", params={"delta": 0.0})
+    with pytest.raises(ValueError, match="b must be"):
+        ProtocolSpec(trigger="cadence", params={"b": 0})
+    with pytest.raises(ValueError, match="fedavg_c"):
+        ProtocolSpec(trigger="cadence", cohort="fraction", commit="subset",
+                     params={"fedavg_c": 1.5})
+    with pytest.raises(ValueError, match="bytes_per_param"):
+        ProtocolSpec(trigger="cadence", params={"bytes_per_param": 0})
+    with pytest.raises(ValueError, match="tau"):
+        ProtocolSpec(trigger="staleness", params={"tau": 0})
+
+
+def test_config_sugar_resolves_only_consumed_fields():
+    """delta never leaks into periodic; fedavg_c never into dynamic."""
+    spec = resolve_spec(ProtocolConfig(kind="periodic", b=7, delta=0.0))
+    assert spec.param("b") == 7
+    assert "delta" not in dict(spec.params)
+    spec = resolve_spec(ProtocolConfig(kind="dynamic", b=3, delta=0.25,
+                                       augmentation="random"))
+    assert spec.param("delta") == 0.25
+    assert spec.param("augmentation") == "random"
+    assert "fedavg_c" not in dict(spec.params)
+
+
+def test_preset_pinned_params_win_over_config_defaults():
+    """A param a preset pins explicitly is part of its identity: the
+    ProtocolConfig sugar's field overlay (which cannot distinguish user
+    values from dataclass defaults) must not clobber it. "stale" pins
+    b=1, so kind sugar and the raw spec behave identically."""
+    assert dict(BOUNDED_STALENESS.params)["b"] == 1
+    resolved = resolve_spec(ProtocolConfig(kind="stale"))   # config b=10
+    assert resolved.param("b") == 1
+    assert resolved.resolved_params() == BOUNDED_STALENESS.resolved_params()
+    # built-in presets pin nothing, so the sugar keeps tuning them
+    assert resolve_spec(ProtocolConfig(kind="periodic")).param("b") == 10
+
+
+def test_named_operators_apply_passed_weights_as_is():
+    """Pre-spec contract of the NAMED ops: an explicitly passed weights
+    vector is used regardless of cfg.weighted — the weighted gate lives
+    only in apply_staged."""
+    stacked = {"x": jnp.asarray([[1., 1.], [3., 5.], [3., 5.], [5., 5.]])}
+    state = ops.init_state(tree_mean(stacked))
+    w = jnp.asarray([10., 1., 1., 1.])
+    cfg = ProtocolConfig(kind="periodic", b=1)          # weighted=False
+    named = ops.periodic(cfg, stacked, state, w)
+    want = (10 * stacked["x"][0] + stacked["x"][1] + stacked["x"][2]
+            + stacked["x"][3]) / 13.0
+    assert np.allclose(np.asarray(named.params["x"][0]), np.asarray(want))
+    gated = ops.apply_staged(cfg, stacked, state, w)
+    assert np.allclose(np.asarray(gated.params["x"][0]),
+                       np.asarray(tree_mean(stacked)["x"]))
+
+
+def test_non_scalar_params_rejected_at_construction():
+    """jax arrays / lists as params would only explode at the compile
+    cache or in to_json — construction rejects them; numpy scalars are
+    canonicalized to plain Python numbers."""
+    for bad in (jnp.float32(0.5), [1, 2], (3,)):
+        with pytest.raises(ValueError, match="plain Python scalar"):
+            ProtocolSpec(trigger="divergence", cohort="balanced",
+                         commit="balancing", params={"delta": bad})
+    spec = ProtocolSpec(trigger="cadence", params={"b": np.int64(4)})
+    assert spec.param("b") == 4 and type(spec.param("b")) is int
+    assert ProtocolSpec.from_json(spec.to_json()) == spec
+
+
+# ---------------------------------------------------------------------------
+# presets == legacy kind dispatch, bitwise (against the PR-2 goldens)
+# ---------------------------------------------------------------------------
+
+with open(os.path.join(os.path.dirname(__file__),
+                       "golden_pr2_engine.json")) as f:
+    GOLDEN = json.load(f)
+GOLDEN_JAX = GOLDEN.get("_meta", {}).get("jax_version")
+
+
+def _run_spec_case(proto, network):
+    """golden_pr2_capture.run_case, but driving the engine with the
+    RESOLVED ProtocolSpec instead of the ProtocolConfig sugar."""
+    spec = resolve_spec(proto)
+    cfg = get_arch("drift_mlp", smoke=True)
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    weighted = spec.param("weighted")
+    streams = LearnerStreams(src, M, batch=10, seed=0,
+                             batch_sizes=[5, 10, 15, 10, 5, 15]
+                             if weighted else None)
+    dl = DecentralizedLearner(
+        lambda p, b: cnn_loss(cfg, p, b),
+        lambda k: init_cnn_params(cfg, k), M, spec,
+        TrainConfig(optimizer="sgd", learning_rate=0.05),
+        sample_weights=streams.weights, network=network)
+    dl.run_chunk(streams.next_chunk(ROUNDS))
+    return {
+        "comm_totals": dl.comm_totals,
+        "cumulative_loss": repr(dl.cumulative_loss),
+        "params_sha256": params_sha256(dl.params),
+        "link_xfer_totals": dl.link_xfer_totals.tolist(),
+        "network_time": repr(dl.network_time),
+    }
+
+
+@pytest.mark.skipif(
+    jax.__version__ != GOLDEN_JAX,
+    reason=f"bitwise goldens captured under jax {GOLDEN_JAX}")
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_preset_spec_equals_kind_dispatch_bitwise(name):
+    """ISSUE-4 acceptance: a resolved preset spec driven directly through
+    the engine reproduces the goldens the kind dispatch is pinned to —
+    comm totals, exact loss, params SHA-256, per-link transfers."""
+    got = _run_spec_case(*CASES[name])
+    want = GOLDEN[name]
+    assert got["comm_totals"] == want["comm_totals"], name
+    assert got["cumulative_loss"] == want["cumulative_loss"], name
+    assert got["params_sha256"] == want["params_sha256"], name
+    assert got["link_xfer_totals"] == want["link_xfer_totals"], name
+    assert got["network_time"] == want["network_time"], name
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trips (hypothesis)
+# ---------------------------------------------------------------------------
+
+# the composable families: any trigger drives any cohort/aggregate/commit
+# family, except the balancing machinery which needs a conditional trigger
+FAMILIES = [("all_reachable", "mean", "average"),
+            ("fraction", "mean", "subset"),
+            ("balanced", "mean", "balancing"),
+            ("neighborhood", "mix", "mix")]
+CONDITIONAL_TRIGGERS = ("divergence", "staleness")
+UNCONDITIONAL_TRIGGERS = ("never", "cadence")
+
+
+def _valid_spec(trigger, family, b, delta, fedavg_c, tau, weighted):
+    cohort, aggregate, commit = family
+    params = {"b": b, "weighted": weighted}
+    if trigger == "never":
+        params = {"weighted": weighted}
+    if trigger == "divergence" or cohort == "balanced":
+        params["delta"] = delta
+    if trigger == "staleness":
+        params["tau"] = tau
+    if cohort == "fraction":
+        params["fedavg_c"] = fedavg_c
+    return ProtocolSpec(trigger=trigger, cohort=cohort,
+                        aggregate=aggregate, commit=commit, params=params)
+
+
+@settings(max_examples=60, deadline=None)
+@given(trig_i=st.integers(0, 3), fam_i=st.integers(0, 3),
+       b=st.integers(1, 20), delta=st.floats(1e-6, 10.0),
+       fedavg_c=st.floats(0.01, 1.0), tau=st.integers(1, 50),
+       weighted=st.booleans())
+def test_spec_roundtrips_through_dict_and_json(trig_i, fam_i, b, delta,
+                                               fedavg_c, tau, weighted):
+    """spec -> to_dict -> from_dict -> spec (and via JSON) for random
+    stage combinations; combos needing a conditional trigger raise at
+    construction when handed an unconditional one."""
+    triggers = CONDITIONAL_TRIGGERS + UNCONDITIONAL_TRIGGERS
+    trigger, family = triggers[trig_i], FAMILIES[fam_i]
+    needs_condition = family[0] == "balanced"
+    if needs_condition and trigger in UNCONDITIONAL_TRIGGERS:
+        with pytest.raises(ValueError, match="conditional"):
+            _valid_spec(trigger, family, b, delta, fedavg_c, tau, weighted)
+        return
+    spec = _valid_spec(trigger, family, b, delta, fedavg_c, tau, weighted)
+    assert ProtocolSpec.from_dict(spec.to_dict()) == spec
+    assert ProtocolSpec.from_json(spec.to_json()) == spec
+    # canonical param ordering: dict-insertion order never leaks
+    shuffled = dict(reversed(list(spec.to_dict()["params"].items())))
+    assert ProtocolSpec.from_dict(
+        {**spec.to_dict(), "params": shuffled}) == spec
+    # capabilities survive the round trip
+    back = ProtocolSpec.from_json(spec.to_json())
+    assert back.uses_overlay == spec.uses_overlay
+    assert back.uses_coordinator == spec.uses_coordinator
+    assert back.extra_state == spec.extra_state
+
+
+def test_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown ProtocolSpec keys"):
+        ProtocolSpec.from_dict({"trigger": "cadence", "cadence": 5})
+    with pytest.raises(ValueError, match="trigger"):
+        ProtocolSpec.from_dict({"cohort": "all_reachable"})
+
+
+# ---------------------------------------------------------------------------
+# the bounded-staleness protocol (ISSUE-4 acceptance)
+# ---------------------------------------------------------------------------
+
+def _mlp_setup():
+    cfg = get_arch("drift_mlp", smoke=True)
+    return (lambda p, b: cnn_loss(cfg, p, b),
+            lambda k: init_cnn_params(cfg, k))
+
+
+def _run_engine(proto, network=None, rounds=40, m=6, seed=0):
+    loss_fn, init_fn = _mlp_setup()
+    src = GraphicalModelStream(seed=0, drift_prob=0.0)
+    streams = LearnerStreams(src, m, batch=10, seed=seed)
+    dl = DecentralizedLearner(
+        loss_fn, init_fn, m, proto,
+        TrainConfig(optimizer="sgd", learning_rate=0.05), network=network)
+    metrics = dl.run_chunk(streams.next_chunk(rounds))
+    return dl, metrics
+
+
+def test_bounded_staleness_cadence_on_ideal_network():
+    """With every learner always reachable, the staleness bound degrades
+    to a period: a full sync exactly every tau rounds."""
+    tau, rounds = 4, 24
+    spec = BOUNDED_STALENESS.with_params(tau=tau)
+    dl, metrics = _run_engine(spec, rounds=rounds, m=6)
+    syncs = np.asarray(metrics.comm.syncs)
+    want = np.zeros(rounds, np.int32)
+    want[tau - 1::tau] = 1                       # rounds tau, 2tau, ...
+    assert syncs.tolist() == want.tolist()
+    assert dl.comm_totals["syncs"] == rounds // tau
+    assert dl.comm_totals["full_syncs"] == rounds // tau
+    # between alarms the fleet is silent
+    assert dl.comm_totals["model_up"] == (rounds // tau) * 6
+
+
+def test_bounded_staleness_under_availability_masks():
+    """The acceptance run: the spec executes inside lax.scan under
+    availability masks, dark learners age past tau and trigger on
+    reappearance, and the ledger balances."""
+    spec = BOUNDED_STALENESS.with_params(tau=3)
+    net = NetworkConfig(act_prob=0.5, seed=3, link_classes=("wifi", "lte"))
+    dl, metrics = _run_engine(spec, network=net, rounds=60, m=6)
+    assert dl.comm_totals["syncs"] >= 1
+    assert np.isfinite(dl.cumulative_loss)
+    # the per-link ledger balances against the scalar accounting
+    assert int(dl.per_link_bytes().sum()) == dl.comm_bytes()
+    # the trigger's counters live in the scanned carry
+    assert dl.sync_state.extra["staleness"].shape == (6,)
+    # under partial availability the alarm fires MORE often than the
+    # ideal-network period (stale returners trigger off-cycle) and every
+    # sync covers all currently-reachable learners
+    assert dl.comm_totals["syncs"] >= 60 // 3
+    assert dl.comm_totals["full_syncs"] == dl.comm_totals["syncs"]
+
+
+def test_bounded_staleness_json_roundtrip_runs_identically():
+    """A spec restored from JSON drives the engine to bitwise-identical
+    results — checkpoints can restore the exact protocol."""
+    spec = BOUNDED_STALENESS.with_params(tau=3)
+    restored = ProtocolSpec.from_json(spec.to_json())
+    net = NetworkConfig(act_prob=0.7, seed=1)
+    dl_a, _ = _run_engine(spec, network=net, rounds=30, m=4)
+    dl_b, _ = _run_engine(restored, network=net, rounds=30, m=4)
+    assert dl_a.comm_totals == dl_b.comm_totals
+    assert dl_a.cumulative_loss == dl_b.cumulative_loss
+    assert params_sha256(dl_a.params) == params_sha256(dl_b.params)
+
+
+def test_stale_kind_sugar_and_hierarchy_composition():
+    """Registration made "stale" a valid ProtocolConfig kind — including
+    as the intra tier of a hierarchy (uses_coordinator capability)."""
+    proto = ProtocolConfig(
+        kind="stale", b=1,
+        tiers=HierarchyConfig(num_clusters=2,
+                              inter=ProtocolConfig(kind="periodic", b=4)))
+    dl, metrics = _run_engine(proto, rounds=16, m=6)
+    assert np.isfinite(dl.cumulative_loss)
+    assert int(dl.per_link_bytes().sum()) == dl.comm_bytes()
+    # per-cluster staleness counters ride the vmapped intra state
+    assert dl.sync_state.intra.extra["staleness"].shape == (2, 3)
+
+
+def test_staleness_composes_with_other_cohort_families():
+    """The trigger is reusable across cohort families with no new code:
+    staleness-triggered FedAvg and staleness-triggered balancing."""
+    stale_fedavg = ProtocolSpec(
+        trigger="staleness", cohort="fraction", commit="subset",
+        params={"tau": 2, "fedavg_c": 0.5}, name="stale_fedavg")
+    dl, _ = _run_engine(stale_fedavg, rounds=12, m=6)
+    # subsets of 3 sync every 2 rounds
+    assert dl.comm_totals["model_up"] > 0
+    assert dl.comm_totals["full_syncs"] == 0       # never everyone at once
+    stale_balanced = ProtocolSpec(
+        trigger="staleness", cohort="balanced", commit="balancing",
+        params={"tau": 3, "delta": 0.5}, name="stale_balanced")
+    dl2, _ = _run_engine(stale_balanced, rounds=12, m=6)
+    assert dl2.comm_totals["syncs"] >= 1
+    assert dl2.comm_totals["messages"] > 0         # polls are accounted
+
+
+def test_checkpoint_roundtrip_with_extra_state_and_spec(tmp_path):
+    """SyncState.extra and the serialized spec survive the npz/json
+    round trip; old checkpoints (no extra, no spec file) still load."""
+    from repro.checkpoint.io import (
+        load_protocol_spec, load_protocol_state, save_protocol_state,
+    )
+    spec = BOUNDED_STALENESS.with_params(tau=2)
+    dl, _ = _run_engine(spec, rounds=8, m=4)
+    path = str(tmp_path / "ckpt")
+    save_protocol_state(path, dl.params, dl.opt_state, dl.sync_state,
+                        protocol=spec)
+    params, opt, state = load_protocol_state(path)
+    assert np.array_equal(state.extra["staleness"],
+                          dl.sync_state.extra["staleness"])
+    assert load_protocol_spec(path) == spec
+    # pre-spec checkpoints: no extra, no spec sidecar
+    stacked = make_stacked(jax.random.PRNGKey(0), 4)
+    plain = ops.init_state(tree_mean(stacked))
+    save_protocol_state(str(tmp_path / "old"), stacked, {"n": jnp.zeros(())},
+                        plain)
+    _, _, loaded = load_protocol_state(str(tmp_path / "old"))
+    assert loaded.extra == {}
+    assert load_protocol_spec(str(tmp_path / "old")) is None
+
+
+def test_hierarchical_checkpoint_sidecar_keeps_tiers(tmp_path):
+    """The spec sidecar of a hierarchical run records the tier structure
+    too — intra spec, cluster count, uplink class and the inter spec all
+    survive the round trip."""
+    from repro.checkpoint.io import (
+        load_protocol_spec, load_protocol_tiers, save_protocol_state,
+    )
+    proto = ProtocolConfig(
+        kind="dynamic", b=2, delta=0.5,
+        tiers=HierarchyConfig(num_clusters=2, link_class="lte",
+                              inter=ProtocolConfig(kind="periodic", b=6)))
+    dl, _ = _run_engine(proto, rounds=4, m=4)
+    path = str(tmp_path / "hier")
+    save_protocol_state(path, dl.params, dl.opt_state, dl.sync_state,
+                        protocol=proto)
+    assert load_protocol_spec(path) == resolve_spec(proto)
+    tiers = load_protocol_tiers(path)
+    assert tiers["num_clusters"] == 2
+    assert tiers["link_class"] == "lte"
+    assert tiers["inter"] == resolve_spec(proto.tiers.inter)
+    # flat checkpoints have no tiers block
+    flat = str(tmp_path / "flat")
+    save_protocol_state(flat, dl.params, dl.opt_state, dl.sync_state,
+                        protocol=ProtocolConfig(kind="periodic", b=3))
+    assert load_protocol_tiers(flat) is None
+
+
+def test_engine_runs_raw_spec_without_config():
+    """ISSUE-4: the engine consumes a ProtocolSpec directly (benchmarks
+    run specs from files without a ProtocolConfig wrapper)."""
+    spec = resolve_spec(ProtocolConfig(kind="dynamic", b=2, delta=0.5))
+    dl_spec, _ = _run_engine(spec, rounds=20, m=4)
+    dl_cfg, _ = _run_engine(ProtocolConfig(kind="dynamic", b=2, delta=0.5),
+                            rounds=20, m=4)
+    assert dl_spec.comm_totals == dl_cfg.comm_totals
+    assert params_sha256(dl_spec.params) == params_sha256(dl_cfg.params)
