@@ -46,6 +46,30 @@ def run(quick: bool = True):
         "hbm_bytes_one_pass": 2 * n * 4,
     })
 
+    # batched sqdist over the flat fleet-plane: the whole fleet's local
+    # conditions in one (m, P) x (P,) grid (layout="flat"'s hot path)
+    mm = 64
+    Xp = jax.random.normal(jax.random.fold_in(k, 9), (mm, n))
+    # pass the tile sizes explicitly so the reported VMEM/HBM math below
+    # can never drift from what the measured kernel actually staged
+    tile_m, tile_n = 8, 65536
+    t_ref = _time(jax.jit(
+        lambda a, b: jnp.sum(jnp.square(a - b[None]), axis=1)), Xp, r)
+    got_rows = np.asarray(ops.sqdist_rows(Xp, r, block_m=tile_m,
+                                          block=tile_n))
+    want_rows = np.asarray(jax.vmap(lambda a: ref.sqdist_ref(a, r))(Xp))
+    rows.append({
+        "kernel": "sqdist_rows", "size": f"{mm}x{n}",
+        "ref_us": round(t_ref, 1),
+        "max_err_vs_oracle": float(
+            np.max(np.abs(got_rows - want_rows)
+                   / np.maximum(np.abs(want_rows), 1.0))),
+        # one (tile_m, tile) plane tile + the matching (1, tile)
+        # reference slice staged per grid step
+        "vmem_tile_bytes": (tile_m + 1) * tile_n * 4,
+        "hbm_bytes_one_pass": (mm * n + n) * 4,
+    })
+
     # flash attention, one head at prefill-like block
     B, S, d = 1, 512, 64
     q = jax.random.normal(k, (B, S, d), jnp.bfloat16)

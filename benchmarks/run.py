@@ -36,6 +36,7 @@ from benchmarks import (
     kernel_bench,
     roofline_table,
     scan_driver,
+    sync_bench,
 )
 
 ALL = [
@@ -51,6 +52,7 @@ ALL = [
     figC_unbalanced,
     fig_network_regimes,
     fig_hierarchy,
+    sync_bench,
     kernel_bench,
     roofline_table,
 ]

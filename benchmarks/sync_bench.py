@@ -1,0 +1,180 @@
+"""Flat fleet-plane vs tree-layout sync kernel (the ISSUE-5 tentpole).
+
+Times ONE staged round of the dynamic-averaging protocol — the paper's
+hot loop: divergence monitoring over every learner plus the balancing
+augmentation — on the paper's 1,199,882-parameter MNIST CNN, for
+``layout="tree"`` (per-leaf pytree expressions, the pre-flat engine) and
+``layout="flat"`` (one (m, P) matrix through the stages,
+``repro.core.flatten``), from IDENTICAL state.
+
+The fleet is constructed so the balancing loop does real work and the
+augmentation count is exact: ``v = m/8`` violators drift a distance
+``sqrt(D0)`` along one shared direction, everyone else sits on the
+reference, so the cohort balances at exactly ``4v = m/2`` members
+(``||mean_B - r||^2 = D0 (v/|B|)^2``, and ``DELTA_HALF`` sits strictly
+between the ``|B| = 4v`` and ``4v - 1`` values). On the tree
+layout every augmentation step re-aggregates the whole fleet —
+O(m*P) per iteration, O(m^2*P) per round; the flat layout's
+incremental running sum pays O(P) per iteration. A second flat timing at
+a delta forcing a FULL augmentation (8v = m members) isolates the
+per-iteration cost — the claim checked is that it stays flat in m.
+
+Equivalence is asserted, not assumed: both layouts must produce a
+bitwise-equal CommRecord and per-link transfer counts, and parameters
+within float-reassociation tolerance.
+
+Rows (persisted as experiments/bench/sync_bench.json, uploaded nightly
+as the BENCH_sync artifact): m, layout, steady-state round_ms, cohort,
+speedup (flat rows, vs the tree round), per_iter_ms (flat rows).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_rows
+from repro.config import get_arch
+from repro.core.divergence import flat_size
+from repro.core.sync import PROTOCOLS, init_state
+from repro.models.cnn import init_cnn_params
+
+NAME = "sync_bench"
+PAPER_REF = "ISSUE 5 tentpole (flat fleet-plane sync path)"
+
+D0 = 16.0          # violators' squared distance to the reference
+# the balanced distance at |B| = k is D0 * (v/k)^2: 1.0 at k = 4v,
+# ~1.02 at k = 4v - 1 (v = 25). DELTA_HALF sits strictly INSIDE that
+# open interval, so the loop stops at exactly 4v = m/2 members in both
+# layouts regardless of float association — a delta exactly on the
+# 1.0 boundary would let an ulp of reassociation flip the trip count
+DELTA_HALF = 1.01
+M_LIST = (8, 64, 200)
+
+
+def _fleet(m: int):
+    """(stacked, ref, v): v = m/8 learners drifted sqrt(D0) along one
+    shared unit direction, the rest exactly on the reference."""
+    cfg = get_arch("mnist_cnn")            # the paper's 1.2M-param CNN
+    base = init_cnn_params(cfg, jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree.flatten(base)
+    keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    u = [jax.random.normal(k, x.shape, jnp.float32)
+         for k, x in zip(keys, leaves)]
+    norm = jnp.sqrt(sum(jnp.sum(x * x) for x in u))
+    v = max(1, m // 8)
+    scale = jnp.where(jnp.arange(m) < v, jnp.float32(np.sqrt(D0)), 0.0)
+    stacked = jax.tree.unflatten(treedef, [
+        b[None] + scale.reshape((m,) + (1,) * b.ndim) * (uu / norm)[None]
+        for b, uu in zip(leaves, u)])
+    stacked = jax.tree.map(jax.block_until_ready, stacked)
+    return stacked, base, v
+
+
+def _round_fn(layout: str, delta: float):
+    spec = PROTOCOLS["dynamic"].with_params(b=1, delta=delta,
+                                            layout=layout)
+    fn = spec.compile()
+    return jax.jit(lambda s, st: fn(s, st))
+
+
+def _time(fn, stacked, state, reps: int) -> float:
+    """Best-of-reps seconds for one round from fixed state (fixed state =
+    identical augmentation trip count every rep)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        res = fn(stacked, state)
+        jax.block_until_ready(res.params)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(quick: bool = True):
+    # the m sweep is the point (the acceptance claim lives at m=200), so
+    # quick mode keeps M_LIST and trims repetitions instead — ~2 min
+    # total on the 2-core CI runner, in line with the other benchmarks
+    rows = []
+    for m in M_LIST:
+        stacked, ref, v = _fleet(m)
+        state = init_state(ref, 0)
+        reps_tree = (2 if quick else 3) if m <= 8 else 1   # O(m^2 P)!
+        reps_flat = 2 if quick else 4
+        results = {}
+        for layout in ("tree", "flat"):
+            fn = _round_fn(layout, DELTA_HALF)
+            res = fn(stacked, state)          # warm the jit cache
+            jax.block_until_ready(res.params)
+            results[layout] = res
+            dt = _time(fn, stacked, state,
+                       reps_tree if layout == "tree" else reps_flat)
+            rows.append({
+                "m": m, "layout": layout,
+                "params": flat_size(ref),
+                "round_ms": round(dt * 1e3, 2),
+                "cohort": int(res.rec.model_up),
+                "violators": v,
+            })
+        t_row, f_row = rows[-2], rows[-1]
+        tr, fr = results["tree"], results["flat"]
+        f_row["speedup"] = round(t_row["round_ms"] / f_row["round_ms"], 2)
+        f_row["counters_equal"] = bool(
+            all(int(getattr(tr.rec, k)) == int(getattr(fr.rec, k))
+                for k in tr.rec._fields)
+            and np.array_equal(np.asarray(tr.xfers), np.asarray(fr.xfers)))
+        f_row["params_close"] = bool(all(
+            np.allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+            for a, b in zip(jax.tree.leaves(tr.params),
+                            jax.tree.leaves(fr.params))))
+        del results, tr, fr
+
+        # per-iteration probe (flat only, largest m only): a delta low
+        # enough to force a FULL augmentation adds exactly (m - 4v) loop
+        # iterations over the half-fleet run; the time difference per
+        # extra iteration is the marginal cost of one balancing step —
+        # the quantity that must not grow with m. At small m the
+        # difference sits below 2-core timing noise (a handful of O(P)
+        # iterations inside a ~150 ms round), so the probe would record
+        # garbage — it only runs, and the claim is only checked, at the
+        # largest m, where ~100 extra iterations give a clean signal.
+        if m == max(M_LIST):
+            delta_full = D0 * (v / m) ** 2 * 0.9
+            fn_full = _round_fn("flat", float(delta_full))
+            res = fn_full(stacked, state)
+            jax.block_until_ready(res.params)
+            assert int(res.rec.full_syncs) == 1   # probe really went full
+            dt_full = _time(fn_full, stacked, state, reps_flat)
+            extra_iters = (m - v) - 3 * v     # 8v - 4v = 4v when 8v == m
+            f_row["per_iter_ms"] = round(
+                (dt_full - f_row["round_ms"] / 1e3)
+                / max(1, extra_iters) * 1e3, 3)
+            del res
+        del stacked, ref
+    save_rows(NAME, rows)
+    return rows
+
+
+def check(rows) -> str:
+    flat = {r["m"]: r for r in rows if r["layout"] == "flat"}
+    big = flat[max(flat)]
+    ok = (big["speedup"] >= 2.0
+          and all(r["counters_equal"] and r["params_close"]
+                  for r in flat.values())
+          # balancing cost per augmentation step independent of m: the
+          # marginal iteration must cost less than 1/m of the round's
+          # fixed O(m*P) work (ravel + dists + commit + unravel are ~7
+          # full-plane passes) — an O(m*P) iteration, like the tree
+          # layout's full re-aggregation, would cost ~1/7 of the round.
+          # The probe must also come out POSITIVE: a negative difference
+          # of the two timings means noise swamped the signal and the
+          # claim was not actually measured — fail loudly, don't pass
+          # vacuously
+          and 0.0 < big["per_iter_ms"] <= big["round_ms"] / big["m"])
+    return "PASS" if ok else "MIXED"
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -271,6 +271,15 @@ class ProtocolConfig:
     ``tiers.inter`` runs among the edge aggregators. ``tiers=None`` is the
     flat single-coordinator protocol, bitwise-identical to the
     pre-hierarchy engine.
+
+    ``layout`` selects the sync arithmetic: ``"tree"`` (default) runs the
+    per-leaf pytree expressions, bitwise-identical to the pre-flat
+    engine; ``"flat"`` carries the fleet through the sync stages as one
+    contiguous ``(m, P)`` matrix (``repro.core.flatten``) — parameters
+    equal to float-reassociation tolerance, identical sync decisions
+    (hence bitwise comm counters) unless a distance lands within
+    reassociation error of the Delta threshold, and the balancing
+    augmentation drops from O(m^2 P) to O(m P).
     """
     kind: str = PROTO_DYNAMIC
     b: int = 10
@@ -279,6 +288,7 @@ class ProtocolConfig:
     augmentation: str = "max_distance"   # max_distance | random | all
     weighted: bool = False               # Algorithm 2 (unbalanced B^i)
     bytes_per_param: int = 4
+    layout: str = "tree"                 # tree | flat (fleet-plane)
     tiers: Optional[HierarchyConfig] = None   # two-tier hierarchy on top
 
     def __post_init__(self):

@@ -11,6 +11,9 @@ and the local condition of learner i w.r.t. reference model r is
 
 ``sq_distance`` optionally routes through the fused Pallas kernel
 (`repro.kernels.ops.sqdist`) — the protocol's monitoring hot-spot.
+``per_learner_sq_distance_flat`` is the batched dual over the flat
+fleet-plane (``repro.core.flatten``): one ``(m, P) x (P,)`` pass, routed
+through the row-tiled Pallas kernel on TPU backends.
 """
 from __future__ import annotations
 
@@ -59,6 +62,27 @@ def sq_distance(a, b, use_kernel: bool = False) -> jnp.ndarray:
         jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32)))
         for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
     )
+
+
+def per_learner_sq_distance_flat(X, r,
+                                 use_kernel: Optional[bool] = None
+                                 ) -> jnp.ndarray:
+    """(m,) squared distances over the FLAT fleet-plane: ``X`` is the
+    (m, P) configuration matrix, ``r`` the (P,) reference row.
+
+    This is the protocol's monitoring hot-spot in one batched pass. On a
+    TPU backend it runs the row-tiled Pallas kernel
+    (``repro.kernels.ops.sqdist_rows``); elsewhere the kernel would
+    execute in interpret mode (Python, orders of magnitude slower than
+    XLA), so the dense jnp row reduction is used instead.
+    ``use_kernel`` forces the choice either way."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.sqdist_rows(X, r)
+    d = X.astype(jnp.float32) - r.astype(jnp.float32)[None]
+    return jnp.sum(d * d, axis=1)
 
 
 def per_learner_sq_distance(stacked, ref) -> jnp.ndarray:

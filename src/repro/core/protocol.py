@@ -175,9 +175,9 @@ class DecentralizedLearner:
         elif self.spec.uses_overlay:
             self._static_adj = net_topology.star(m)
 
-        # cumulative counters (host-side python ints / floats)
+        # cumulative counters (host-side python ints / floats / numpy)
         self.cumulative_loss = 0.0
-        self.cumulative_loss_per_learner = jnp.zeros((m,))
+        self.cumulative_loss_per_learner = np.zeros((m,), np.float32)
         self.comm_totals = {k: 0 for k in ops.CommRecord._fields}
         self.rounds = 0
         self.network_time = 0.0                    # simulated seconds
@@ -198,6 +198,8 @@ class DecentralizedLearner:
 
         self._step = jax.jit(self._make_step())
         self._chunk = jax.jit(self._make_chunk())
+        self._fold_step = jax.jit(self._make_fold(chunked=False))
+        self._fold_chunk = jax.jit(self._make_fold(chunked=True))
 
     # ------------------------------------------------------------------
     def _make_step(self):
@@ -306,21 +308,59 @@ class DecentralizedLearner:
         return chunk
 
     # ------------------------------------------------------------------
+    def _make_fold(self, chunked: bool):
+        """The host-counter fold as ONE device program: every per-call
+        reduction the cumulative counters need, computed on device and
+        fetched in a single transfer — ``step``/``run_chunk`` used to pay
+        ~6 separate ``float(...)``/``int(...)``/``np.asarray(...)``
+        device syncs per call."""
+        fields = ops.CommRecord._fields
+
+        def fold(metrics: ProtocolMetrics):
+            if chunked:     # leaves carry a leading round axis: reduce it
+                return {
+                    "loss": jnp.sum(metrics.loss_per_learner),
+                    "loss_per_learner": jnp.sum(
+                        metrics.loss_per_learner, axis=0),
+                    "comm": {k: jnp.sum(getattr(metrics.comm, k))
+                             for k in fields},
+                    "net_time": jnp.sum(metrics.net_time),
+                    "num_active": jnp.sum(metrics.num_active),
+                    "link_xfers": jnp.sum(metrics.link_xfers, axis=0),
+                    "link_counts": jnp.sum(metrics.link_counts, axis=0),
+                }
+            return {
+                "loss": jnp.sum(metrics.loss_per_learner),
+                "loss_per_learner": metrics.loss_per_learner,
+                "comm": {k: getattr(metrics.comm, k) for k in fields},
+                "net_time": metrics.net_time,
+                "num_active": metrics.num_active,
+                "link_xfers": metrics.link_xfers,
+                "link_counts": metrics.link_counts,
+            }
+
+        return fold
+
+    def _accumulate(self, host: dict, n: int) -> None:
+        """Fold one call's (already host-side) reductions into the
+        cumulative counters."""
+        self.rounds += n
+        self.cumulative_loss += float(host["loss"])
+        self.cumulative_loss_per_learner += host["loss_per_learner"]
+        for k in ops.CommRecord._fields:
+            self.comm_totals[k] += int(host["comm"][k])
+        self.network_time += float(host["net_time"])
+        self.active_rounds_total += int(host["num_active"])
+        self.link_xfer_totals += host["link_xfers"].astype(np.int64)
+        self.link_bytes_totals += self.price_link_counts(
+            host["link_counts"].astype(np.int64))
+
+    # ------------------------------------------------------------------
     def step(self, batches) -> ProtocolMetrics:
         """One round. ``batches``: pytree with leading (m, B, ...) leaves."""
         self.params, self.opt_state, self.sync_state, metrics = self._step(
             self.params, self.opt_state, self.sync_state, batches)
-        self.rounds += 1
-        self.cumulative_loss += float(jnp.sum(metrics.loss_per_learner))
-        self.cumulative_loss_per_learner = (
-            self.cumulative_loss_per_learner + metrics.loss_per_learner)
-        for k in ops.CommRecord._fields:
-            self.comm_totals[k] += int(getattr(metrics.comm, k))
-        self.network_time += float(metrics.net_time)
-        self.active_rounds_total += int(metrics.num_active)
-        self.link_xfer_totals += np.asarray(metrics.link_xfers, np.int64)
-        self.link_bytes_totals += self.price_link_counts(
-            np.asarray(metrics.link_counts, np.int64))
+        self._accumulate(jax.device_get(self._fold_step(metrics)), 1)
         return metrics
 
     # ------------------------------------------------------------------
@@ -331,7 +371,8 @@ class DecentralizedLearner:
         the chunk is ``batches[t]``. Returns stacked ``ProtocolMetrics``
         whose leaves carry the round axis: ``loss_per_learner`` is (n, m),
         every ``CommRecord`` field is (n,). Host-side cumulative counters
-        are folded in once per chunk; protocol numerics are identical to n
+        are folded in once per chunk — one device reduction program plus
+        one transfer; protocol numerics are identical to n
         calls of ``step`` (same traced round function), so comm counters
         match bitwise and losses to float32 summation order.
 
@@ -341,19 +382,7 @@ class DecentralizedLearner:
         n = int(jax.tree.leaves(batches)[0].shape[0])
         self.params, self.opt_state, self.sync_state, metrics = self._chunk(
             self.params, self.opt_state, self.sync_state, batches)
-        self.rounds += n
-        self.cumulative_loss += float(jnp.sum(metrics.loss_per_learner))
-        self.cumulative_loss_per_learner = (
-            self.cumulative_loss_per_learner
-            + jnp.sum(metrics.loss_per_learner, axis=0))
-        for k in ops.CommRecord._fields:
-            self.comm_totals[k] += int(jnp.sum(getattr(metrics.comm, k)))
-        self.network_time += float(jnp.sum(metrics.net_time))
-        self.active_rounds_total += int(jnp.sum(metrics.num_active))
-        self.link_xfer_totals += np.asarray(
-            jnp.sum(metrics.link_xfers, axis=0), np.int64)
-        self.link_bytes_totals += self.price_link_counts(
-            np.asarray(metrics.link_counts, np.int64).sum(axis=0))
+        self._accumulate(jax.device_get(self._fold_chunk(metrics)), n)
         return metrics
 
     # ------------------------------------------------------------------
@@ -472,8 +501,15 @@ class SerialLearner:
         length — drive it with a fixed chunk size as ``train.loop`` does."""
         self.params, self.opt_state, losses = self._chunk(
             self.params, self.opt_state, batches)
-        for loss in np.asarray(losses):
-            self.cumulative_loss += float(loss)
+        # one host transfer + one float64 sum instead of a Python loop.
+        # Bitwise-identical to the per-round accumulation whenever the
+        # chunk's float32 losses stay within ~29 bits of dynamic range of
+        # each other (then every float64 partial sum of the 24-bit-
+        # mantissa terms is exact and association cannot matter — pinned
+        # by test_serial_run_chunk_matches_step_loop_bitwise); a chunk
+        # mixing wildly diverged and normal losses may differ from the
+        # step loop in the last ulp
+        self.cumulative_loss += float(np.asarray(losses, np.float64).sum())
         return losses
 
 

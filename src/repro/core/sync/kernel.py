@@ -36,6 +36,15 @@ Availability (``active``: optional (m,) bool mask from
 locally but cannot communicate — they neither violate, nor get polled,
 nor receive averages. ``active=None`` is the ideal always-on network and
 preserves the pre-network engine's numerics bitwise.
+
+Layout (the global ``layout`` spec param, ``ProtocolConfig.layout``
+sugar): every preset runs either on the per-leaf pytree expressions
+(``"tree"``, the default — bitwise vs the goldens) or on the flat
+(m, P) fleet-plane (``"flat"``, ``repro.core.flatten`` — params to
+float-reassociation tolerance, identical sync decisions hence bitwise
+comm counters away from razor-edge threshold ties, balancing in
+O(m*P)). The same registered stages serve both; no preset is
+layout-specific.
 """
 from __future__ import annotations
 

@@ -26,7 +26,11 @@ the round's inputs):
   trigger), evaluated every round. An optional ``condition(ctx) ->
   (hot, nhot)`` runs inside the gated branch and yields the per-learner
   "wants to sync" mask; when present the cohort/aggregate/commit pipeline
-  only runs when ``nhot > 0`` (sigma_Delta's shape). Triggers own their
+  only runs when ``nhot > 0`` (sigma_Delta's shape). A condition may
+  return a third element — a dict of auxiliary arrays (e.g. the (m,)
+  distances the divergence check already paid for) — which the compiled
+  round threads to the downstream stages as ``StageCtx.cond_aux`` so the
+  round computes them exactly once. Triggers own their
   extra carried state via ``init_extra(params, m) -> dict``,
   ``commit_extra(ctx, mask) -> dict`` (after a sync; ``mask`` is the
   committed cohort) and ``skip_extra(ctx) -> dict`` (any round without a
@@ -92,7 +96,19 @@ class StageResult(NamedTuple):
 
 
 class StageCtx(NamedTuple):
-    """One round's inputs, shared by every stage."""
+    """One round's inputs, shared by every stage.
+
+    Under ``layout="flat"`` the compiled round additionally carries the
+    flat fleet-plane (``repro.core.flatten``): ``flat`` is the whole
+    configuration as one (m, P) matrix, ``ref_flat`` the reference model
+    as its (P,) row, and ``adapter`` the static ravel/unravel maps.
+    Stages branch on ``ctx.flat is not None`` to run their dense-matrix
+    form; under the default ``layout="tree"`` all three stay ``None`` and
+    the per-leaf pytree expressions run bitwise-unchanged. ``cond_aux``
+    carries whatever a conditional trigger computed beyond (hot, nhot) —
+    e.g. the divergence trigger's (m,) distances, which the balancing
+    cohort reuses as its augmentation priority instead of recomputing
+    them from scratch."""
     params: Dict[str, Any]           # the spec's resolved (static) params
     stacked: Any                     # (m, ...) model pytree
     state: SyncState
@@ -102,6 +118,10 @@ class StageCtx(NamedTuple):
     m: int                           # fleet size (static)
     t: jnp.ndarray                   # this round's index (state.step + 1)
     reach: jnp.ndarray               # (m,) bool; all-ones when active=None
+    flat: Optional[jnp.ndarray] = None      # (m, P) plane (flat layout)
+    ref_flat: Optional[jnp.ndarray] = None  # (P,) reference row
+    adapter: Any = None              # static FleetAdapter (flat layout)
+    cond_aux: Any = None             # trigger-condition extras (e.g. dists)
 
 
 class CohortOut(NamedTuple):

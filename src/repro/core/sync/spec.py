@@ -34,18 +34,29 @@ from typing import Any, Dict, Tuple
 
 import jax
 
+from repro.core import flatten
 from repro.core.sync import registry, stages
 from repro.core.sync.registry import (
     CommRecord, StageCtx, StageResult, SyncOut, get_protocol,
 )
 
-# parameters every spec understands regardless of its stages
-GLOBAL_PARAMS: Dict[str, Any] = {"weighted": False, "bytes_per_param": 4}
+# parameters every spec understands regardless of its stages. ``layout``
+# picks the fleet arithmetic: "tree" (per-leaf pytree expressions,
+# bitwise vs the goldens) or "flat" (the one-(m, P)-matrix fleet plane,
+# repro.core.flatten — params to float reassociation tolerance, and the
+# same sync decisions hence bitwise comm counters, except in the
+# measure-zero case where a distance lands within reassociation error
+# of the Delta threshold and the differently-associated sums disagree
+# about the comparison)
+GLOBAL_PARAMS: Dict[str, Any] = {"weighted": False, "bytes_per_param": 4,
+                                 "layout": "tree"}
+
+LAYOUTS = ("tree", "flat")
 
 # the ProtocolConfig fields that overlay onto a preset's params (only the
 # ones the preset's stages actually consume are applied)
 _CONFIG_PARAM_FIELDS = ("b", "delta", "fedavg_c", "augmentation",
-                        "weighted", "bytes_per_param")
+                        "weighted", "bytes_per_param", "layout")
 
 
 def _canonical(v):
@@ -183,6 +194,10 @@ class ProtocolSpec:
             raise ValueError(
                 f"bytes_per_param must be an int >= 1, got "
                 f"{resolved['bytes_per_param']!r}")
+        if resolved["layout"] not in LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {LAYOUTS}, got "
+                f"{resolved['layout']!r}")
         for rec in (trig, coh, agg, com):
             if rec.validate is not None:
                 rec.validate(resolved)
@@ -248,34 +263,57 @@ def _compiled_round(spec: ProtocolSpec):
                   lax.cond(nhot > 0):]                 # triggers only
                     cohort -> aggregate -> commit
           false: identity + zero accounting (extra state still ages)
+
+    Under ``layout="flat"`` the gated branch additionally ravels the
+    configuration onto the flat fleet-plane (``repro.core.flatten``) —
+    the stages then run their dense (m, P) forms and the committed plane
+    is unraveled back to the pytree before the branches join, so the
+    scan carry (and everything outside the sync machinery) keeps the
+    pytree layout either way. A round whose gate does not fire never
+    pays for the ravel.
     """
     trig, coh, agg, com = spec.stage_records()
     p = spec.resolved_params()
+    flat_layout = p["layout"] == "flat"
 
     def round_fn(stacked, state, weights=None, active=None, adjacency=None):
         m = stages.num_learners(stacked)
         t = state.step + 1
         reach = stages.cohort_all(m, active)
+        adapter = flatten.fleet_adapter(stacked) if flat_layout else None
         ctx = StageCtx(params=p, stacked=stacked, state=state,
                        weights=weights, active=active, adjacency=adjacency,
-                       m=m, t=t, reach=reach)
+                       m=m, t=t, reach=reach, adapter=adapter)
 
         def skip_out(rng):
             return SyncOut(stacked, state.ref, state.v, rng,
                            trig.skip_extra(ctx), CommRecord.zero(),
                            stages.zeros_i32(m), stages.zeros_i32(m))
 
-        def pipeline(hot, nhot, rng):
-            cout = coh.fn(ctx, hot, nhot, rng)
-            out = com.fn(ctx, cout, agg.fn(ctx, cout), hot, nhot)
-            return out._replace(extra=trig.commit_extra(ctx, cout.mask))
+        def pipeline(sctx, hot, nhot, rng):
+            cout = coh.fn(sctx, hot, nhot, rng)
+            out = com.fn(sctx, cout, agg.fn(sctx, cout), hot, nhot)
+            out = out._replace(extra=trig.commit_extra(sctx, cout.mask))
+            if adapter is not None:
+                out = out._replace(params=adapter.unravel(out.params),
+                                   ref=adapter.unravel_model(out.ref))
+            return out
 
         def sync(rng):
+            sctx = ctx
+            if adapter is not None:
+                sctx = ctx._replace(
+                    flat=adapter.ravel(stacked),
+                    ref_flat=adapter.ravel_model(state.ref))
             if trig.condition is None:
-                return pipeline(reach, None, rng)
-            hot, nhot = trig.condition(ctx)
+                return pipeline(sctx, reach, None, rng)
+            cond = trig.condition(sctx)
+            hot, nhot = cond[0], cond[1]
+            if len(cond) > 2:     # condition extras -> downstream stages
+                sctx = sctx._replace(cond_aux=cond[2])
             return jax.lax.cond(
-                nhot > 0, lambda r: pipeline(hot, nhot, r), skip_out, rng)
+                nhot > 0, lambda r: pipeline(sctx, hot, nhot, r),
+                skip_out, rng)
 
         gate = trig.gate(ctx)
         if gate is False:      # statically-never trigger (nosync): no cond

@@ -23,6 +23,17 @@ half registers the built-in stages into the named registries
 (``repro.core.sync.registry``) under the contracts a ``ProtocolSpec``
 composes; the six preset protocols in ``kernel.py`` are nothing but
 spec-level wirings of these registrations.
+
+Every registered stage has TWO arithmetic forms behind one registration:
+the per-leaf pytree expressions (``layout="tree"``, the default, bitwise
+vs the goldens) and the dense matrix form over the flat fleet-plane
+(``layout="flat"``, see ``repro.core.flatten``), selected by
+``ctx.flat is not None``. On the plane the per-learner distances are one
+batched row pass, the masked weighted mean is one ``w @ X`` matvec,
+gossip's mixing step is one ``W @ X`` matmul, commits are one
+``jnp.where`` on (m, P) — and the balancing augmentation maintains an
+incremental running sum so each iteration costs O(P) instead of a full
+O(m*P) fleet re-aggregation.
 """
 from __future__ import annotations
 
@@ -32,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.divergence import (
-    per_learner_sq_distance, tree_mean, tree_weighted_mean,
+    per_learner_sq_distance, per_learner_sq_distance_flat, tree_mean,
+    tree_weighted_mean,
 )
 from repro.core.sync.registry import (
     CohortOut, CommRecord, StageCtx, SyncOut, carried_v,
@@ -64,6 +76,71 @@ def broadcast_model(model, m: int):
     """Replicate a single-model pytree along a fresh leading learner axis."""
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape),
                         model)
+
+
+# ---------------------------------------------------------------------------
+# flat fleet-plane arithmetic (layout="flat"; repro.core.flatten)
+# ---------------------------------------------------------------------------
+
+def flat_weighted_mean(X, w):
+    """Masked/weighted mean over the plane's rows: ``w @ X / sum(w)`` —
+    ONE matvec for the whole fleet. Same all-zero guard as
+    ``tree_weighted_mean``: an empty weight vector yields the zero row."""
+    w = w.astype(X.dtype)
+    wsum = jnp.sum(w)
+    denom = jnp.where(wsum > 0, wsum, jnp.ones_like(wsum))
+    return (w @ X) / denom
+
+
+def flat_aggregate_mean(X, mask, weights=None):
+    """The plane dual of ``aggregate_mean``."""
+    w = mask.astype(X.dtype)
+    if weights is not None:
+        w = w * weights.astype(X.dtype)
+    return flat_weighted_mean(X, w)
+
+
+def _flat_sq_to_ref(row, ref):
+    d = row - ref
+    return jnp.sum(d * d)
+
+
+# stage-internal helpers: pick the arithmetic form the ctx carries -----------
+
+def _cfg_view(ctx):
+    return ctx.flat if ctx.flat is not None else ctx.stacked
+
+
+def _ref_view(ctx):
+    return ctx.ref_flat if ctx.flat is not None else ctx.state.ref
+
+
+def _select_commit(ctx, mask, mean):
+    """Cohort members adopt the aggregate, on whichever layout the round
+    carries (one (m, P) ``jnp.where`` on the plane)."""
+    if ctx.flat is not None:
+        return jnp.where(mask[:, None], mean[None, :], ctx.flat)
+    return commit_select(ctx.stacked, mask, mean)
+
+
+def _ref_if_commit(ctx, moved, mean):
+    if ctx.flat is not None:
+        return jnp.where(moved, mean, ctx.ref_flat)
+    return commit_ref_if(moved, mean, ctx.state.ref)
+
+
+def _broadcast_commit(ctx, mean, m: int):
+    if ctx.flat is not None:
+        return jnp.broadcast_to(mean[None, :], (m,) + mean.shape)
+    return broadcast_model(mean, m)
+
+
+def _cond_dists(ctx):
+    """The (m,) distances a conditional trigger already computed this
+    round (``StageCtx.cond_aux``), or None."""
+    if isinstance(ctx.cond_aux, dict):
+        return ctx.cond_aux.get("dists")
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -110,7 +187,7 @@ def cohort_fraction_masked(sub, m: int, k: int, active) -> jnp.ndarray:
 
 
 def cohort_balanced(delta: float, augmentation: str, stacked, ref, violated,
-                    rng, weights=None, reach=None):
+                    rng, weights=None, reach=None, dists=None):
     """sigma_Delta's cohort: coordinator balancing. Augment the violator
     set B until the partial average re-enters the safe zone
     ``||mean_B - r||^2 <= Delta`` or B covers every REACHABLE learner
@@ -120,12 +197,15 @@ def cohort_balanced(delta: float, augmentation: str, stacked, ref, violated,
     each augmentation step re-aggregates to test the safe zone — so it
     returns both ``(mask B, mean_B)``. The caller derives poll counts from
     the mask: it is the single source of truth for who the coordinator
-    contacted.
+    contacted. ``dists`` accepts the (m,) distances the divergence
+    trigger already computed this round (the augmentation priority), so a
+    round never pays for the monitoring pass twice.
     """
     m = num_learners(stacked)
     if reach is None:
         reach = jnp.ones((m,), bool)
-    dists = per_learner_sq_distance(stacked, ref)     # (m,) — augment priority
+    if dists is None:
+        dists = per_learner_sq_distance(stacked, ref)  # (m,) — priority
 
     if augmentation == "random":
         prio = jax.random.uniform(rng, (m,))
@@ -162,6 +242,60 @@ def cohort_balanced(delta: float, augmentation: str, stacked, ref, violated,
     mask, _ = jax.lax.while_loop(cond, body, (violated, d0))
     mean = aggregate_mean(stacked, mask, weights)
     return mask, mean
+
+
+def cohort_balanced_flat(delta: float, augmentation: str, X, ref, violated,
+                         rng, weights=None, reach=None, dists=None):
+    """The balancing augmentation on the flat fleet-plane, with an
+    INCREMENTAL running sum: the loop carries ``(sum_B, wsum_B)`` and each
+    augmentation step adds one row (``sum += w[nxt] * X[nxt]``) and tests
+    the safe zone on ``||sum/wsum - r||^2`` — O(P) per iteration, so the
+    whole balancing pass is O(m*P) instead of the tree layout's
+    O(m^2*P) worst case (a full fleet re-aggregation per step).
+
+    Same contract as ``cohort_balanced``: returns ``(mask B, mean_B)``
+    with the final mean recomputed as one masked matvec (matching the
+    aggregate stage's expression, not the running sum's association)."""
+    m = X.shape[0]
+    if reach is None:
+        reach = jnp.ones((m,), bool)
+
+    if augmentation == "all":   # jump straight to full sync: no priority
+        return reach, flat_aggregate_mean(X, reach, weights)
+
+    if augmentation == "random":
+        prio = jax.random.uniform(rng, (m,))
+    else:  # "max_distance"
+        prio = (per_learner_sq_distance_flat(X, ref) if dists is None
+                else dists)
+
+    w = (weights.astype(X.dtype) if weights is not None
+         else jnp.ones((m,), X.dtype))
+
+    def safe_dist(s, ws):
+        denom = jnp.where(ws > 0, ws, jnp.ones_like(ws))
+        return _flat_sq_to_ref(s / denom, ref)
+
+    w0 = violated.astype(X.dtype) * w
+    s0 = w0 @ X
+    ws0 = jnp.sum(w0)
+
+    def cond(carry):
+        mask, _, _, d = carry
+        return jnp.logical_and(jnp.any(reach & ~mask), d > delta)
+
+    def body(carry):
+        mask, s, ws, _ = carry
+        cand = jnp.where(mask | ~reach, -jnp.inf, prio)
+        nxt = jnp.argmax(cand)
+        mask = mask.at[nxt].set(True)
+        s = s + w[nxt] * X[nxt]
+        ws = ws + w[nxt]
+        return mask, s, ws, safe_dist(s, ws)
+
+    mask, _, _, _ = jax.lax.while_loop(
+        cond, body, (violated, s0, ws0, safe_dist(s0, ws0)))
+    return mask, flat_aggregate_mean(X, mask, weights)
 
 
 def cohort_neighborhood(m: int, active: Optional[jnp.ndarray], adjacency):
@@ -291,9 +425,17 @@ def trigger_cadence(ctx: StageCtx):
 
 
 def _divergence_condition(ctx: StageCtx):
-    _, violated, nviol = divergence_trigger(
-        ctx.params["delta"], ctx.stacked, ctx.state.ref, ctx.reach)
-    return violated, nviol
+    if ctx.flat is not None:
+        dists = per_learner_sq_distance_flat(ctx.flat, ctx.ref_flat)
+        violated = (dists > ctx.params["delta"]) & ctx.reach
+        nviol = jnp.sum(violated).astype(jnp.int32)
+    else:
+        dists, violated, nviol = divergence_trigger(
+            ctx.params["delta"], ctx.stacked, ctx.state.ref, ctx.reach)
+    # the distances double as the balancing cohort's augmentation
+    # priority — thread them so the round pays for the monitoring pass
+    # exactly once
+    return violated, nviol, {"dists": dists}
 
 
 @register_trigger("divergence", condition=_divergence_condition,
@@ -343,9 +485,12 @@ def cohort_balanced_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
     force_full = v_new >= ctx.m
     base = jnp.where(force_full, ctx.reach, hot)
     v_reset = jnp.where(force_full, jnp.int32(0), v_new)
-    mask, _ = cohort_balanced(
-        ctx.params["delta"], ctx.params["augmentation"], ctx.stacked,
-        ctx.state.ref, base, sub, ctx.weights, ctx.reach)
+    balance = (cohort_balanced_flat if ctx.flat is not None
+               else cohort_balanced)
+    mask, _ = balance(
+        ctx.params["delta"], ctx.params["augmentation"], _cfg_view(ctx),
+        _ref_view(ctx), base, sub, ctx.weights, ctx.reach,
+        dists=_cond_dists(ctx))
     full = jnp.all(mask == ctx.reach)
     v_final = jnp.where(full, jnp.int32(0), v_reset)
     return CohortOut(mask=mask, rng=rng, v=v_final, full=full)
@@ -371,7 +516,13 @@ def cohort_neighborhood_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
 def aggregate_mean_stage(ctx: StageCtx, cout: CohortOut):
     """Masked (weighted) mean of the cohort; the full-fleet ideal path
     (``cout.ideal``) keeps the pre-network ``tree_mean`` expression
-    bitwise."""
+    bitwise. On the flat plane both paths are one matvec (the ideal
+    unweighted one a plain row mean)."""
+    if ctx.flat is not None:
+        if cout.ideal and ctx.weights is None:
+            return jnp.mean(ctx.flat, axis=0)
+        mask = (jnp.ones((ctx.m,), bool) if cout.ideal else cout.mask)
+        return flat_aggregate_mean(ctx.flat, mask, ctx.weights)
     if cout.ideal:
         return aggregate_mean_ideal(ctx.stacked, ctx.m, ctx.weights)
     return aggregate_mean(ctx.stacked, cout.mask, ctx.weights)
@@ -379,7 +530,11 @@ def aggregate_mean_stage(ctx: StageCtx, cout: CohortOut):
 
 @register_aggregate("mix", needs=("mixing",))
 def aggregate_mix_stage(ctx: StageCtx, cout: CohortOut):
-    """One Metropolis–Hastings mixing step over the neighborhood."""
+    """One Metropolis–Hastings mixing step over the neighborhood — a
+    per-leaf tensordot on the tree layout, ONE ``W @ X`` matmul on the
+    plane."""
+    if ctx.flat is not None:
+        return cout.aux["W"].astype(ctx.flat.dtype) @ ctx.flat
     return aggregate_mix(ctx.stacked, cout.aux["W"])
 
 
@@ -391,7 +546,7 @@ def commit_average(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
     reference moves whenever anybody was actually averaged."""
     m = ctx.m
     if cout.ideal:
-        newcfg = broadcast_model(mean, m)
+        newcfg = _broadcast_commit(ctx, mean, m)
         rec = CommRecord(
             model_up=jnp.int32(m), model_down=jnp.int32(m),
             messages=jnp.int32(0), syncs=jnp.int32(1),
@@ -401,9 +556,9 @@ def commit_average(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
                        zeros_i32(m))
     mask = cout.mask
     nsync = jnp.sum(mask).astype(jnp.int32)
-    newcfg = commit_select(ctx.stacked, mask, mean)
+    newcfg = _select_commit(ctx, mask, mean)
     # the reference only moves when somebody was actually averaged
-    new_ref = commit_ref_if(nsync > 0, mean, ctx.state.ref)
+    new_ref = _ref_if_commit(ctx, nsync > 0, mean)
     rec = CommRecord(
         model_up=nsync, model_down=nsync, messages=jnp.int32(0),
         syncs=(nsync > 0).astype(jnp.int32),
@@ -419,7 +574,7 @@ def commit_subset(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
     when the subset covered every reachable learner."""
     m = ctx.m
     mask = cout.mask
-    newcfg = commit_select(ctx.stacked, mask, mean)
+    newcfg = _select_commit(ctx, mask, mean)
     if ctx.active is None:
         k = cout.aux["k"]
         rec = CommRecord(
@@ -430,7 +585,7 @@ def commit_subset(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
                        ctx.state.extra, rec, xfers_cohort(mask),
                        zeros_i32(m))
     nsel = jnp.sum(mask).astype(jnp.int32)
-    new_ref = commit_ref_if(nsel > 0, mean, ctx.state.ref)
+    new_ref = _ref_if_commit(ctx, nsel > 0, mean)
     rec = CommRecord(
         model_up=nsel, model_down=nsel, messages=jnp.int32(0),
         syncs=(nsel > 0).astype(jnp.int32),
@@ -448,9 +603,9 @@ def commit_balancing(ctx: StageCtx, cout: CohortOut, mean, hot,
     average, the reference moves only on a full sync (Algorithm 1), and
     the per-link chatter is attributed to the links that sent it."""
     mask, full = cout.mask, cout.full
-    newcfg = commit_select(ctx.stacked, mask, mean)
+    newcfg = _select_commit(ctx, mask, mean)
     # reference model updates only on full sync (Algorithm 1)
-    new_ref = commit_ref_if(full, mean, ctx.state.ref)
+    new_ref = _ref_if_commit(ctx, full, mean)
     nsync = jnp.sum(mask).astype(jnp.int32)
     # every member of the final B that did not itself violate was polled
     # by the coordinator — counting nsync - nhot covers the balancing loop
@@ -487,6 +642,6 @@ def commit_mix(ctx: StageCtx, cout: CohortOut, mixed, hot, nhot) -> SyncOut:
         # one mixing step couples every reachable learner
         full_syncs=((edges > 0) & (edges == na * (na - 1)))
         .astype(jnp.int32))
-    return SyncOut(mixed, ctx.state.ref, carried_v(ctx, cout), cout.rng,
+    return SyncOut(mixed, _ref_view(ctx), carried_v(ctx, cout), cout.rng,
                    ctx.state.extra, rec, xfers_neighborhood(A),
                    zeros_i32(ctx.m))

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.sqdist import sqdist as _sqdist
+from repro.kernels.sqdist import sqdist_rows as _sqdist_rows
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
 
@@ -22,6 +23,13 @@ def _interp() -> bool:
 
 def sqdist(x, r, *, block: int = 65536):
     return _sqdist(x, r, block=block, interpret=_interp())
+
+
+def sqdist_rows(x, r, *, block_m: int = 8, block: int = 65536):
+    """Batched local condition over the flat fleet-plane:
+    ``(m, P) x (P,) -> (m,)`` row-wise squared distances in one grid."""
+    return _sqdist_rows(x, r, block_m=block_m, block=block,
+                        interpret=_interp())
 
 
 def tree_sqdist(tree_a, tree_b, *, block: int = 65536):

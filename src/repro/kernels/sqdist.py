@@ -1,11 +1,21 @@
-"""Fused squared-distance reduction kernel — the protocol's monitoring
+"""Fused squared-distance reduction kernels — the protocol's monitoring
 hot-spot: every learner evaluates ``||theta - r||^2`` every b steps
 (Algorithm 1's local condition).
 
-One HBM pass: each grid step stages a (1, block) tile of both vectors into
-VMEM, accumulates ``sum((x - r)^2)`` in f32 into a (1, 1) output tile that
-every grid step maps to (TPU grid iteration is sequential, so the
-accumulation is race-free). No materialized difference tensor.
+``sqdist`` is the single-model reduction: one HBM pass, each grid step
+stages a (1, block) tile of both vectors into VMEM and accumulates
+``sum((x - r)^2)`` in f32 into a (1, 1) output tile that every grid step
+maps to (TPU grid iteration is sequential, so the accumulation is
+race-free). No materialized difference tensor.
+
+``sqdist_rows`` is the FLEET-PLANE variant the flat sync path runs:
+``(m, P) x (P,) -> (m,)`` over a 2-D row x column-block grid. Each grid
+step stages a ``(block_m, block)`` tile of the plane plus the matching
+``(1, block)`` slice of the reference row, and accumulates per-row
+partial sums into a ``(block_m, 1)`` output tile revisited across the
+column sweep — the whole fleet's local conditions in one pass over the
+``(m, P)`` matrix, instead of m kernel launches (or 2xleaf-count HBM
+walks on the pytree layout).
 """
 from __future__ import annotations
 
@@ -53,3 +63,58 @@ def sqdist(x, r, *, block: int = 65536, interpret: bool = True):
         interpret=interpret,
     )(x2, r2)
     return out[0, 0]
+
+
+def _sqdist_rows_kernel(x_ref, r_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = x_ref[...].astype(jnp.float32) - r_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(d * d, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block", "interpret"))
+def sqdist_rows(x, r, *, block_m: int = 8, block: int = 65536,
+                interpret: bool = True):
+    """Row-wise ``||x[i] - r||^2``: x ``(m, n)``, r ``(n,)`` -> ``(m,)``.
+
+    No padding copies of the plane: the grid only visits the
+    block-aligned column prefix of the FULL array (every accessed tile
+    stays in bounds, so nothing is re-materialized — a ``jnp.pad`` to a
+    block multiple would silently copy the whole (m, n) matrix first)
+    and the ragged tail (< ``block`` columns, if any) is reduced with a
+    plain jnp row pass and added. Rows that do not tile into ``block_m``
+    fall back to ``block_m=1``, which always divides. The grid sweeps
+    columns innermost, so each ``(block_m, 1)`` output tile accumulates
+    its rows' partials sequentially (race-free on TPU's sequential
+    grid)."""
+    m, n = x.shape
+    rf = r.reshape(-1)
+    if m % block_m:
+        block_m = 1
+    n0 = n - n % block
+
+    def tail_sums(xt, rt):
+        d = xt.astype(jnp.float32) - rt.astype(jnp.float32)[None]
+        return jnp.sum(d * d, axis=1)
+
+    if n0 == 0:                    # everything is tail: no kernel launch
+        return tail_sums(x, rf)
+    out = pl.pallas_call(
+        _sqdist_rows_kernel,
+        grid=(m // block_m, n0 // block),
+        in_specs=[
+            pl.BlockSpec((block_m, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(x, rf.reshape(1, n))[:, 0]
+    if n0 < n:
+        out = out + tail_sums(x[:, n0:], rf[n0:])
+    return out

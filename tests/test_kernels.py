@@ -49,6 +49,48 @@ def test_sqdist_property(n, seed):
 
 
 # ---------------------------------------------------------------------------
+# batched sqdist over the flat fleet-plane: (m, P) x (P,) -> (m,)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(1, 1), (3, 7), (8, 256), (5, 1000),
+                                 (17, 512 + 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sqdist_rows_sweep(m, n, dtype):
+    """The fleet-plane grid variant vs the single-vector oracle, row by
+    row — odd shapes exercise both the row and the column padding."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 1000 + n))
+    X = jax.random.normal(k1, (m, n), dtype)
+    r = jax.random.normal(k2, (n,), dtype)
+    got = np.asarray(ops.sqdist_rows(X, r, block_m=4, block=256))
+    assert got.shape == (m,)
+    want = np.asarray(jax.vmap(lambda x: ref.sqdist_ref(x, r))(X))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_sqdist_rows_matches_scalar_kernel():
+    """Row i of the batched kernel == the single-model kernel on row i."""
+    k = jax.random.PRNGKey(0)
+    X = jax.random.normal(k, (6, 777))
+    r = jax.random.normal(jax.random.fold_in(k, 1), (777,))
+    rows = np.asarray(ops.sqdist_rows(X, r, block_m=2, block=128))
+    for i in range(6):
+        one = float(ops.sqdist(X[i], r, block=128))
+        assert np.isclose(rows[i], one, rtol=1e-5), i
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 12), n=st.integers(1, 2048),
+       seed=st.integers(0, 1000))
+def test_sqdist_rows_property(m, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (m, n))
+    r = jax.random.normal(k2, (n,))
+    got = np.asarray(ops.sqdist_rows(X, r, block_m=8, block=512))
+    want = np.asarray(jax.vmap(lambda x: ref.sqdist_ref(x, r))(X))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------
 
