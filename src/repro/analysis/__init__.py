@@ -1,1 +1,50 @@
-"""Roofline analysis: HLO collective parsing + 3-term model."""
+"""Static and post-hoc analysis of the protocol machinery.
+
+Each tool answers one question about the program WITHOUT running it on
+real data:
+
+* ``contracts`` — *do the registered stages keep their declared
+  shape/dtype promises, on every preset, layout and hierarchy?*
+  Abstract evaluation via ``jax.eval_shape`` (zero FLOPs); also the
+  layout-conformance harness any future fleet backend plugs into.
+* ``audit`` — *does the traced round contain a forbidden pattern?*
+  Recursive jaxpr walk: host callbacks inside ``lax.scan``, float64 /
+  weak-type leaks, dynamic shapes, narrow-int accumulators that can
+  wrap. ``audit_hlo`` applies the dtype/callback rules to compiled HLO
+  text.
+* ``lint`` — *does the source obey the repo's shape rules?* AST pass:
+  no bare asserts, ``jax.__version__`` only in compat.py, every
+  ``register_*`` call declares a contract, ``network/`` modules stay
+  pure in (seed, t).
+* ``hlo`` — *what collectives does a compiled module run, and how many
+  bytes do they move?* Regex parser over HLO text (import
+  ``repro.analysis.hlo`` directly).
+* ``roofline`` — *is a measured run compute-, memory- or
+  network-bound?* Three-term model on top of ``hlo`` (import
+  ``repro.analysis.roofline`` directly).
+
+``python -m repro.analysis --check-all`` runs the first three as the
+tier-1 CI gate (exit 1 on any finding).
+"""
+from repro.analysis.report import Finding, render_findings
+from repro.analysis.contracts import (
+    abstract_state, check_all, check_hierarchy, check_layout_equivalence,
+    check_preset_matrix, check_registry, check_round, check_spec,
+    mixed_template,
+)
+from repro.analysis.audit import (
+    audit_fn, audit_hlo, audit_jaxpr, audit_presets, audit_spec,
+)
+from repro.analysis.lint import lint_file, lint_paths, lint_source
+
+__all__ = [
+    "Finding", "render_findings",
+    # contracts
+    "abstract_state", "check_all", "check_hierarchy",
+    "check_layout_equivalence", "check_preset_matrix", "check_registry",
+    "check_round", "check_spec", "mixed_template",
+    # audit
+    "audit_fn", "audit_hlo", "audit_jaxpr", "audit_presets", "audit_spec",
+    # lint
+    "lint_file", "lint_paths", "lint_source",
+]

@@ -1,0 +1,75 @@
+"""``python -m repro.analysis`` — the static-analysis CI gate.
+
+    python -m repro.analysis --check-all          # contracts + audit + lint
+    python -m repro.analysis --contracts          # abstract spec checking
+    python -m repro.analysis --audit              # jaxpr audit of all presets
+    python -m repro.analysis --lint [paths...]    # AST repo lint
+
+Exit status 0 = clean, 1 = findings (printed one per line). The whole
+gate is ``jax.eval_shape`` + ``jax.make_jaxpr`` + ``ast`` — no FLOPs, no
+devices, seconds of wall-clock — so it runs tier-1 in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+from repro.analysis.report import Finding, render_findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis gate: contract checking (eval_shape), "
+                    "jaxpr audit, repo lint.")
+    ap.add_argument("--check-all", action="store_true",
+                    help="run every analyzer (the CI gate)")
+    ap.add_argument("--contracts", action="store_true",
+                    help="abstract contract checking of every registered "
+                         "preset x layout x hierarchy")
+    ap.add_argument("--audit", action="store_true",
+                    help="jaxpr audit of every preset's scanned round")
+    ap.add_argument("--lint", action="store_true",
+                    help="AST lint (bare asserts, version probes, missing "
+                         "contracts, network purity)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories for --lint (default: the "
+                         "installed repro package)")
+    args = ap.parse_args(argv)
+
+    run_contracts = args.check_all or args.contracts
+    run_audit = args.check_all or args.audit
+    run_lint = args.check_all or args.lint
+    if not (run_contracts or run_audit or run_lint):
+        ap.print_help()
+        return 2
+
+    findings: List[Finding] = []
+    t0 = time.time()
+    if run_contracts or run_audit:
+        import repro.core.sync  # noqa: F401 — populate the registries
+    if run_contracts:
+        from repro.analysis.contracts import check_all
+        findings += check_all()
+    if run_audit:
+        from repro.analysis.audit import audit_presets
+        findings += audit_presets()
+    if run_lint:
+        from repro.analysis.lint import lint_paths
+        findings += lint_paths(args.paths or None)
+
+    dt = time.time() - t0
+    if findings:
+        print(render_findings(findings))
+        print(f"{len(findings)} finding(s) in {dt:.1f}s", file=sys.stderr)
+        return 1
+    ran = [n for n, r in (("contracts", run_contracts), ("audit", run_audit),
+                          ("lint", run_lint)) if r]
+    print(f"OK: {' + '.join(ran)} clean in {dt:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

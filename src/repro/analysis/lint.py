@@ -1,0 +1,165 @@
+"""AST lint: the repo-shape rules no runtime test can enforce.
+
+Four rules over ``src/repro`` (pure ``ast`` — no imports of the linted
+code, so a file with a syntax error is itself a finding, not a crash):
+
+* **bare-assert** — no ``assert`` statements in library code: they
+  vanish under ``python -O`` and turn contract violations into silent
+  corruption. Raise ``ValueError``/``KeyError`` with a message instead.
+* **jax-version** — ``jax.__version__`` may be consulted ONLY in
+  ``compat.py``: every version probe outside the compat shim is a
+  lurking fork in behavior that the pinned-toolchain CI cannot see.
+* **contract-required** — every ``register_trigger``/``register_cohort``/
+  ``register_aggregate``/``register_commit`` call must pass a
+  non-None ``contract=`` (the declaration ``repro.analysis.contracts``
+  verifies abstractly).
+* **network-impure** — modules under ``repro/network/`` must be pure
+  functions of ``(seed, t)``: no wall-clock (``time``/``datetime``), no
+  stateful RNG (``random``, ``secrets``, ``numpy.random``), no carried
+  JAX keys (``jax.random.split`` — derive per-round keys with
+  ``fold_in`` on the seed instead), no ``global`` statements. This is
+  what makes availability traces replayable from a scalar seed.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, List, Optional
+
+from repro.analysis.report import Finding
+
+__all__ = ["lint_source", "lint_file", "lint_paths", "default_root",
+           "REGISTER_FUNCS"]
+
+REGISTER_FUNCS = frozenset({
+    "register_trigger", "register_cohort", "register_aggregate",
+    "register_commit",
+})
+
+_IMPURE_MODULES = frozenset({"time", "random", "datetime", "secrets"})
+
+
+def default_root() -> str:
+    """The installed ``repro`` package directory — what ``--check-all``
+    lints when no paths are given."""
+    import repro
+    # repro is a namespace package (no __init__.py): __file__ is None,
+    # the package directory lives in __path__
+    return os.path.abspath(next(iter(repro.__path__)))
+
+
+def _is_compat(path: str) -> bool:
+    return os.path.basename(path) == "compat.py"
+
+
+def _is_network(path: str) -> bool:
+    parts = path.replace(os.sep, "/").split("/")
+    return "network" in parts
+
+
+def _call_name(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return ""
+
+
+def _dotted(node) -> str:
+    """'jax.random.split' for a nested Attribute/Name chain, else ''."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source text. ``path`` scopes the path-dependent
+    rules (compat exemption, network purity) and labels the findings."""
+    findings: List[Finding] = []
+
+    def bad(rule, node, msg):
+        findings.append(Finding("lint", rule, f"{path}:{node.lineno}", msg))
+
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding("lint", "syntax-error", f"{path}:{e.lineno or 0}",
+                        str(e.msg))]
+
+    compat = _is_compat(path)
+    network = _is_network(path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            bad("bare-assert", node,
+                "bare assert in library code — it vanishes under "
+                "python -O; raise ValueError/KeyError with a message")
+        elif isinstance(node, ast.Attribute):
+            dotted = _dotted(node)
+            if dotted == "jax.__version__" and not compat:
+                bad("jax-version", node,
+                    "jax.__version__ consulted outside compat.py — "
+                    "version probes live in the compat shim only")
+            if network and dotted in ("jax.random.split",
+                                      "np.random", "numpy.random"):
+                bad("network-impure", node,
+                    f"{dotted} in a network module — availability and "
+                    f"topology must be pure in (seed, t); derive keys "
+                    f"with jax.random.fold_in on the scalar seed")
+        elif isinstance(node, ast.Call):
+            if _call_name(node) in REGISTER_FUNCS:
+                kw = {k.arg: k.value for k in node.keywords}
+                contract = kw.get("contract")
+                if contract is None or (isinstance(contract, ast.Constant)
+                                        and contract.value is None):
+                    bad("contract-required", node,
+                        f"{_call_name(node)} without a StageContract — "
+                        f"declare the stage's shape/dtype promises "
+                        f"(repro.analysis.contracts verifies them)")
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            if not network:
+                continue
+            if isinstance(node, ast.Import):
+                mods = [a.name.split(".")[0] for a in node.names]
+            else:
+                mods = [(node.module or "").split(".")[0]]
+            for mod in mods:
+                if mod in _IMPURE_MODULES:
+                    bad("network-impure", node,
+                        f"import of {mod!r} in a network module — "
+                        f"availability and topology must be pure in "
+                        f"(seed, t)")
+        elif isinstance(node, ast.Global) and network:
+            bad("network-impure", node,
+                "global statement in a network module — availability "
+                "and topology must be pure in (seed, t)")
+    return findings
+
+
+def lint_file(path: str) -> List[Finding]:
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def lint_paths(paths: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` file under the given files/directories
+    (default: the installed ``repro`` package)."""
+    if paths is None:
+        paths = [default_root()]
+    findings: List[Finding] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d != "__pycache__")
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        findings += lint_file(os.path.join(dirpath, fn))
+        else:
+            findings += lint_file(p)
+    return findings

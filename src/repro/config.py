@@ -422,27 +422,61 @@ class NetworkConfig:
     seed: int = 0
 
     def __post_init__(self):
-        assert self.topology in TOPOLOGIES, self.topology
-        assert 0.0 <= self.er_p <= 1.0
-        assert self.geo_radius > 0.0
-        assert self.redraw_every >= 0
+        if self.topology not in TOPOLOGIES:
+            raise KeyError(
+                f"unknown topology {self.topology!r}; "
+                f"known: {sorted(TOPOLOGIES)}")
+        if not 0.0 <= self.er_p <= 1.0:
+            raise ValueError(
+                f"er_p is an edge probability, must be in [0, 1]: "
+                f"got {self.er_p!r}")
+        if not self.geo_radius > 0.0:
+            raise ValueError(
+                f"geo_radius must be > 0, got {self.geo_radius!r}")
+        if self.redraw_every < 0:
+            raise ValueError(
+                f"redraw_every must be >= 0 (0 = static graph), "
+                f"got {self.redraw_every!r}")
         # mobility is a property of the geometric graph (positions move);
         # reject the combo instead of silently keeping other overlays static
-        assert self.redraw_every == 0 or self.topology == TOPO_GEOMETRIC, (
-            f"redraw_every only applies to topology='geometric', "
-            f"got {self.topology!r}")
-        assert 0.0 < self.act_prob <= 1.0
-        assert 0.0 <= self.straggler_frac <= 1.0
-        assert 0.0 < self.straggler_act_prob <= 1.0
-        assert self.outage_every >= 0
-        assert self.outage_length >= 1
+        if self.redraw_every != 0 and self.topology != TOPO_GEOMETRIC:
+            raise ValueError(
+                f"redraw_every only applies to topology='geometric', "
+                f"got {self.topology!r}")
+        if not 0.0 < self.act_prob <= 1.0:
+            raise ValueError(
+                f"act_prob is a per-round availability probability, must "
+                f"be in (0, 1]: got {self.act_prob!r}")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError(
+                f"straggler_frac must be in [0, 1], "
+                f"got {self.straggler_frac!r}")
+        if not 0.0 < self.straggler_act_prob <= 1.0:
+            raise ValueError(
+                f"straggler_act_prob must be in (0, 1], "
+                f"got {self.straggler_act_prob!r}")
+        if self.outage_every < 0:
+            raise ValueError(
+                f"outage_every must be >= 0 (0 = no outages), "
+                f"got {self.outage_every!r}")
+        if self.outage_length < 1:
+            raise ValueError(
+                f"outage_length must be >= 1 round, "
+                f"got {self.outage_length!r}")
         # an outage longer than its period is a permanent blackout, not a
         # scheduled one — reject rather than silently darken the fleet
-        assert (self.outage_every == 0
-                or self.outage_length <= self.outage_every), (
-            self.outage_length, self.outage_every)
-        assert 0.0 <= self.outage_frac <= 1.0
-        assert len(self.link_classes) >= 1
+        if self.outage_every != 0 and self.outage_length > self.outage_every:
+            raise ValueError(
+                f"outage_length ({self.outage_length}) must not exceed "
+                f"outage_every ({self.outage_every}) — that is a permanent "
+                f"blackout, not a scheduled outage")
+        if not 0.0 <= self.outage_frac <= 1.0:
+            raise ValueError(
+                f"outage_frac must be in [0, 1], got {self.outage_frac!r}")
+        if len(self.link_classes) < 1:
+            raise ValueError(
+                "link_classes must name at least one link class "
+                "(assigned round-robin over the learner index)")
         unknown = [c for c in self.link_classes if c not in LINK_CLASS_NAMES]
         if unknown:
             raise KeyError(

@@ -27,9 +27,24 @@ def flat_size(tree) -> int:
     return sum(x.size for x in jax.tree.leaves(tree))
 
 
+def _acc_dtype(dt):
+    """Accumulation dtype for reductions over a leaf: at least float32.
+
+    Sub-f32 leaves (bfloat16/float16) accumulate in float32 and narrow
+    back, matching the flat fleet-plane (whose dtype is the promotion of
+    the leaf dtypes, at least f32) instead of summing m terms in an
+    8-bit-mantissa format. For float32 leaves every cast below is a
+    no-op, so the pre-fix expressions — and the PR-2 goldens — are
+    reproduced bitwise."""
+    return jnp.promote_types(dt, jnp.float32)
+
+
 def tree_mean(stacked):
-    """Mean over the leading learner axis of every leaf."""
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+    """Mean over the leading learner axis of every leaf (accumulated in
+    ``_acc_dtype``, returned in the leaf dtype)."""
+    def mean1(x):
+        return jnp.mean(x, axis=0, dtype=_acc_dtype(x.dtype)).astype(x.dtype)
+    return jax.tree.map(mean1, stacked)
 
 
 def tree_weighted_mean(stacked, weights):
@@ -39,13 +54,21 @@ def tree_weighted_mean(stacked, weights):
     masking) yields the zero model instead of 0/0 = NaN — the operators'
     selection masks then keep the previous configuration unchanged, so no
     NaN ever reaches the scan carry.
+
+    Weighting happens in ``_acc_dtype`` (at least float32) and narrows
+    back to the leaf dtype: the B^i weights are never downcast to a
+    sub-f32 leaf dtype, and the sum over m learners never accumulates in
+    bfloat16 — the dtype-promotion contract the static contract checker
+    (``repro.analysis.contracts``) verifies against the flat layout.
     """
     wsum = jnp.sum(weights)
     denom = jnp.where(wsum > 0, wsum, jnp.ones_like(wsum))
 
     def wmean(x):
-        w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-        return jnp.sum(x * w, axis=0) / denom.astype(x.dtype)
+        acc = _acc_dtype(x.dtype)
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(acc)
+        return (jnp.sum(x.astype(acc) * w, axis=0)
+                / denom.astype(acc)).astype(x.dtype)
 
     return jax.tree.map(wmean, stacked)
 

@@ -17,7 +17,11 @@ The plane dtype is the promotion of the leaf dtypes (at least float32),
 so float32/bfloat16/float16 leaves round-trip BITWISE through
 ``unravel(ravel(x))`` — narrowing back to the leaf dtype after a widening
 cast is exact. Non-floating leaves are rejected at adapter construction:
-the plane is a parameter space, not a carrier for integer state.
+the plane is a parameter space, not a carrier for integer state. The
+tree-layout aggregates accumulate in the same promoted dtype
+(``repro.core.divergence._acc_dtype``), and the static contract checker
+(``repro.analysis.contracts``) pins the two layouts to identical
+abstract outputs on a mixed f32+bf16 template.
 
 Offsets and shapes are plain Python/numpy metadata, so ``ravel``/
 ``unravel`` trace to pure reshape+concatenate (no arithmetic) and work

@@ -54,7 +54,8 @@ import jax
 
 # re-exported shared types (the historical import surface)
 from repro.core.sync.registry import (  # noqa: F401
-    CommRecord, PROTOCOLS, StageResult, SyncState, register_protocol,
+    CommRecord, PROTOCOLS, StageContract, StageResult, SyncState,
+    register_protocol,
 )
 from repro.core.sync.spec import (
     _CONFIG_PARAM_FIELDS, ProtocolSpec, resolve_spec,

@@ -49,6 +49,15 @@ the round's inputs):
 Every stage may declare ``params`` (name -> default, merged into the
 spec's parameter space) and ``validate(params)`` (raise ``ValueError`` at
 spec CONSTRUCTION, not trace time).
+
+Every stage MUST declare a ``StageContract`` — the shape/dtype promises
+the static contract checker (``repro.analysis.contracts``) verifies by
+abstract evaluation across every preset × layout × hierarchy combination:
+counters stay int32, masks stay bool, the committed configuration keeps
+the input dtypes exactly, aggregate outputs match their declared kind
+((P,)/model vs (m, P)/fleet duals), and trigger-owned extra state keeps
+its declared dtypes through commit and skip paths. The repo lint
+(``repro.analysis.lint``) rejects ``register_*`` calls without one.
 """
 from __future__ import annotations
 
@@ -157,6 +166,45 @@ def carried_v(ctx: StageCtx, cout: CohortOut) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# stage contracts
+# ---------------------------------------------------------------------------
+
+class StageContract(NamedTuple):
+    """The static shape/dtype promises of one registered stage.
+
+    Declared at registration (``register_*(..., contract=...)``) and
+    verified — never trusted — by ``repro.analysis.contracts``, which
+    abstract-evaluates the stage (``jax.eval_shape``, zero FLOPs) under
+    every registered preset × layout × hierarchy combination. Slots read
+    only the fields that concern them:
+
+    * **trigger** — ``extra_state``: ``(name, dtype)`` pairs for the
+      arrays the trigger threads through ``SyncState.extra`` (each (m,);
+      ``init_extra``/``commit_extra``/``skip_extra`` must all produce
+      exactly this structure). ``cond_aux``: the keys of the condition's
+      auxiliary-output dict (each an (m,) array).
+    * **cohort** — ``manages_v``: the stage owns the violation counter
+      (returns a scalar int32 ``v`` and a scalar bool ``full``;
+      everything else must leave both ``None``). ``aux``: the keys of
+      ``CohortOut.aux``.
+    * **aggregate** — ``out``: ``"model"`` (a single-model pytree on the
+      tree layout / a (P,) row on the plane) or ``"fleet"`` (an (m, ...)
+      stacked pytree / the full (m, P) plane).
+
+    Universal promises (not declarable — always enforced): the committed
+    configuration and reference keep the input shapes AND dtypes bitwise,
+    ``v``/``CommRecord``/``xfers``/``link_msgs`` are int32, masks are
+    bool, the RNG key dtype is preserved.
+    """
+    summary: str = ""
+    extra_state: tuple = ()       # trigger: ((name, dtype-str), ...)
+    cond_aux: tuple = ()          # trigger: condition aux dict keys
+    manages_v: bool = False       # cohort: owns v/full
+    aux: tuple = ()               # cohort: CohortOut.aux dict keys
+    out: str = "model"            # aggregate: "model" | "fleet"
+
+
+# ---------------------------------------------------------------------------
 # stage records
 # ---------------------------------------------------------------------------
 
@@ -181,6 +229,7 @@ class TriggerStage(NamedTuple):
     skip_extra: Callable              # ctx -> dict
     params: Dict[str, Any]
     validate: Optional[Callable]
+    contract: Optional[StageContract] = None
 
     @property
     def conditional(self) -> bool:
@@ -196,6 +245,7 @@ class CohortStage(NamedTuple):
     needs_condition: bool             # requires a conditional trigger
     params: Dict[str, Any]
     validate: Optional[Callable]
+    contract: Optional[StageContract] = None
 
 
 class AggregateStage(NamedTuple):
@@ -204,6 +254,7 @@ class AggregateStage(NamedTuple):
     needs: frozenset                  # cohort labels this stage depends on
     params: Dict[str, Any]
     validate: Optional[Callable]
+    contract: Optional[StageContract] = None
 
 
 class CommitStage(NamedTuple):
@@ -213,6 +264,7 @@ class CommitStage(NamedTuple):
     needs_condition: bool
     params: Dict[str, Any]
     validate: Optional[Callable]
+    contract: Optional[StageContract] = None
 
 
 # ---------------------------------------------------------------------------
@@ -238,7 +290,8 @@ def register_trigger(name: str, *, condition: Optional[Callable] = None,
                      commit_extra: Optional[Callable] = None,
                      skip_extra: Optional[Callable] = None,
                      params: Optional[Dict[str, Any]] = None,
-                     validate: Optional[Callable] = None):
+                     validate: Optional[Callable] = None,
+                     contract: Optional[StageContract] = None):
     """Register the decorated function as trigger ``name``'s gate."""
     def deco(gate: Callable) -> Callable:
         _enter(TRIGGERS, "trigger", name, TriggerStage(
@@ -246,7 +299,8 @@ def register_trigger(name: str, *, condition: Optional[Callable] = None,
             init_extra=init_extra or _default_init_extra,
             commit_extra=commit_extra or _default_commit_extra,
             skip_extra=skip_extra or _default_skip_extra,
-            params=dict(params or {}), validate=validate))
+            params=dict(params or {}), validate=validate,
+            contract=contract))
         return gate
     return deco
 
@@ -255,36 +309,40 @@ def register_cohort(name: str, *, provides=(), uses_overlay: bool = False,
                     uses_coordinator: bool = True,
                     needs_condition: bool = False,
                     params: Optional[Dict[str, Any]] = None,
-                    validate: Optional[Callable] = None):
+                    validate: Optional[Callable] = None,
+                    contract: Optional[StageContract] = None):
     def deco(fn: Callable) -> Callable:
         _enter(COHORTS, "cohort", name, CohortStage(
             name=name, fn=fn, provides=frozenset(provides),
             uses_overlay=uses_overlay, uses_coordinator=uses_coordinator,
             needs_condition=needs_condition, params=dict(params or {}),
-            validate=validate))
+            validate=validate, contract=contract))
         return fn
     return deco
 
 
 def register_aggregate(name: str, *, needs=(),
                        params: Optional[Dict[str, Any]] = None,
-                       validate: Optional[Callable] = None):
+                       validate: Optional[Callable] = None,
+                       contract: Optional[StageContract] = None):
     def deco(fn: Callable) -> Callable:
         _enter(AGGREGATES, "aggregate", name, AggregateStage(
             name=name, fn=fn, needs=frozenset(needs),
-            params=dict(params or {}), validate=validate))
+            params=dict(params or {}), validate=validate,
+            contract=contract))
         return fn
     return deco
 
 
 def register_commit(name: str, *, needs=(), needs_condition: bool = False,
                     params: Optional[Dict[str, Any]] = None,
-                    validate: Optional[Callable] = None):
+                    validate: Optional[Callable] = None,
+                    contract: Optional[StageContract] = None):
     def deco(fn: Callable) -> Callable:
         _enter(COMMITS, "commit", name, CommitStage(
             name=name, fn=fn, needs=frozenset(needs),
             needs_condition=needs_condition, params=dict(params or {}),
-            validate=validate))
+            validate=validate, contract=contract))
         return fn
     return deco
 

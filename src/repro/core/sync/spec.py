@@ -51,6 +51,10 @@ from repro.core.sync.registry import (
 GLOBAL_PARAMS: Dict[str, Any] = {"weighted": False, "bytes_per_param": 4,
                                  "layout": "tree"}
 
+# the registered fleet layouts. A new backend (e.g. a device-sharded
+# plane) joins by adding its name here and branching in the stages — the
+# static contract checker (repro.analysis.contracts) then holds every
+# registered preset to abstract tree-equivalence automatically.
 LAYOUTS = ("tree", "flat")
 
 # the ProtocolConfig fields that overlay onto a preset's params (only the

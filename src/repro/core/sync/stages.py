@@ -47,7 +47,7 @@ from repro.core.divergence import (
     tree_weighted_mean,
 )
 from repro.core.sync.registry import (
-    CohortOut, CommRecord, StageCtx, SyncOut, carried_v,
+    CohortOut, CommRecord, StageContract, StageCtx, SyncOut, carried_v,
     register_aggregate, register_cohort, register_commit, register_trigger,
 )
 
@@ -341,9 +341,15 @@ def aggregate_mean_ideal(stacked, m: int, weights=None):
 
 def aggregate_mix(stacked, W):
     """One mixing step: every learner's model becomes its W-row combination
-    of the neighborhood's models."""
-    return jax.tree.map(
-        lambda x: jnp.tensordot(W.astype(x.dtype), x, axes=1), stacked)
+    of the neighborhood's models. The matmul runs in the promoted
+    accumulation dtype (at least f32) and narrows back to the leaf dtype —
+    the float32 Metropolis–Hastings weights are never downcast to a
+    sub-f32 leaf dtype (f32 leaves: expression-identical to the goldens)."""
+    def mix(x):
+        acc = jnp.promote_types(x.dtype, jnp.float32)
+        return jnp.tensordot(W.astype(acc), x.astype(acc),
+                             axes=1).astype(x.dtype)
+    return jax.tree.map(mix, stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -411,14 +417,17 @@ def _validate_balanced(params):
 
 # ---- triggers -------------------------------------------------------------
 
-@register_trigger("never")
+@register_trigger("never", contract=StageContract(
+    summary="statically-never gate; no state, no condition"))
 def trigger_never(ctx: StageCtx):
     """nosync's trigger: the Python constant False — the compiled round
     skips the sync machinery entirely (no ``lax.cond`` is traced)."""
     return False
 
 
-@register_trigger("cadence", params={"b": 1}, validate=_validate_b)
+@register_trigger("cadence", params={"b": 1}, validate=_validate_b,
+                  contract=StageContract(
+                      summary="scalar bool gate t % b == 0; stateless"))
 def trigger_cadence(ctx: StageCtx):
     """sigma_b's trigger: fire every ``b`` rounds, unconditionally."""
     return cadence_fire(ctx.params["b"], ctx.t)
@@ -439,7 +448,11 @@ def _divergence_condition(ctx: StageCtx):
 
 
 @register_trigger("divergence", condition=_divergence_condition,
-                  params={"b": 1, "delta": 0.5}, validate=_validate_delta)
+                  params={"b": 1, "delta": 0.5}, validate=_validate_delta,
+                  contract=StageContract(
+                      summary="conditional gate; threads the (m,) f32 "
+                              "monitoring distances to downstream stages",
+                      cond_aux=("dists",)))
 def trigger_divergence(ctx: StageCtx):
     """sigma_Delta's trigger: check every ``b`` rounds (the gate); the
     condition marks reachable learners with ``||f_i - r||^2 > Delta``."""
@@ -448,7 +461,9 @@ def trigger_divergence(ctx: StageCtx):
 
 # ---- cohorts --------------------------------------------------------------
 
-@register_cohort("all_reachable", provides=("full-cohort",))
+@register_cohort("all_reachable", provides=("full-cohort",),
+                 contract=StageContract(
+                     summary="(m,) bool mask = reachability; no counter"))
 def cohort_all_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
     """sigma_b's cohort: every reachable learner; on the ideal network the
     full fleet (``ideal=True`` keeps the pre-network expressions)."""
@@ -457,7 +472,11 @@ def cohort_all_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
 
 
 @register_cohort("fraction", provides=("subset",),
-                 params={"fedavg_c": 0.3}, validate=_validate_fraction)
+                 params={"fedavg_c": 0.3}, validate=_validate_fraction,
+                 contract=StageContract(
+                     summary="(m,) bool random C-fraction; static subset "
+                             "size k in aux",
+                     aux=("k",)))
 def cohort_fraction_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
     """FedAvg's cohort: a random ceil(C*m)-subset, drawn from the
     REACHABLE learners under availability masks."""
@@ -472,7 +491,11 @@ def cohort_fraction_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
 
 @register_cohort("balanced", provides=("balance",), needs_condition=True,
                  params={"delta": 0.5, "augmentation": "max_distance"},
-                 validate=_validate_balanced)
+                 validate=_validate_balanced,
+                 contract=StageContract(
+                     summary="balancing augmentation; owns the int32 "
+                             "violation counter and the full-sync flag",
+                     manages_v=True))
 def cohort_balanced_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
     """sigma_Delta's cohort: coordinator balancing (Algorithm 1). Owns the
     violation counter: the hot count accumulates into ``v``, ``v >= m``
@@ -497,7 +520,11 @@ def cohort_balanced_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
 
 
 @register_cohort("neighborhood", provides=("mixing",), uses_overlay=True,
-                 uses_coordinator=False)
+                 uses_coordinator=False,
+                 contract=StageContract(
+                     summary="peer overlay cohort: (m, m) bool active "
+                             "adjacency A + f32 mixing matrix W in aux",
+                     aux=("A", "W")))
 def cohort_neighborhood_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
     """Gossip's cohort: the availability-masked peer overlay and its
     Metropolis–Hastings mixing matrix. No coordinator."""
@@ -512,7 +539,9 @@ def cohort_neighborhood_stage(ctx: StageCtx, hot, nhot, rng) -> CohortOut:
 
 # ---- aggregates -----------------------------------------------------------
 
-@register_aggregate("mean")
+@register_aggregate("mean", contract=StageContract(
+    summary="masked (weighted) cohort mean in the leaf dtypes",
+    out="model"))
 def aggregate_mean_stage(ctx: StageCtx, cout: CohortOut):
     """Masked (weighted) mean of the cohort; the full-fleet ideal path
     (``cout.ideal``) keeps the pre-network ``tree_mean`` expression
@@ -528,7 +557,9 @@ def aggregate_mean_stage(ctx: StageCtx, cout: CohortOut):
     return aggregate_mean(ctx.stacked, cout.mask, ctx.weights)
 
 
-@register_aggregate("mix", needs=("mixing",))
+@register_aggregate("mix", needs=("mixing",), contract=StageContract(
+    summary="one M-H mixing step: per-learner output, not a single model",
+    out="fleet"))
 def aggregate_mix_stage(ctx: StageCtx, cout: CohortOut):
     """One Metropolis–Hastings mixing step over the neighborhood — a
     per-leaf tensordot on the tree layout, ONE ``W @ X`` matmul on the
@@ -540,7 +571,8 @@ def aggregate_mix_stage(ctx: StageCtx, cout: CohortOut):
 
 # ---- commits --------------------------------------------------------------
 
-@register_commit("average", needs=("full-cohort",))
+@register_commit("average", needs=("full-cohort",), contract=StageContract(
+    summary="cohort adopts the mean; ref moves when anyone averaged"))
 def commit_average(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
     """sigma_b's commit: every cohort member adopts the aggregate; the
     reference moves whenever anybody was actually averaged."""
@@ -568,7 +600,9 @@ def commit_average(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
                    ctx.state.extra, rec, xfers_cohort(mask), zeros_i32(m))
 
 
-@register_commit("subset", needs=("subset",))
+@register_commit("subset", needs=("subset",), contract=StageContract(
+    summary="subset adopts the mean; full when it covered every "
+            "reachable learner"))
 def commit_subset(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
     """FedAvg's commit: the subset adopts the aggregate; a sync is "full"
     when the subset covered every reachable learner."""
@@ -596,7 +630,10 @@ def commit_subset(ctx: StageCtx, cout: CohortOut, mean, hot, nhot) -> SyncOut:
                    ctx.state.extra, rec, xfers_cohort(mask), zeros_i32(m))
 
 
-@register_commit("balancing", needs=("balance",), needs_condition=True)
+@register_commit("balancing", needs=("balance",), needs_condition=True,
+                 contract=StageContract(
+                     summary="balanced cohort adopts the partial average; "
+                             "per-link chatter on the sending links"))
 def commit_balancing(ctx: StageCtx, cout: CohortOut, mean, hot,
                      nhot) -> SyncOut:
     """sigma_Delta's commit: the balanced cohort adopts the partial
@@ -625,7 +662,9 @@ def commit_balancing(ctx: StageCtx, cout: CohortOut, mean, hot,
                    ctx.state.extra, rec, xfers_cohort(mask), link_msgs)
 
 
-@register_commit("mix", needs=("mixing",))
+@register_commit("mix", needs=("mixing",), contract=StageContract(
+    summary="every learner adopts its mixing row; transfers occupy both "
+            "endpoints' links; the reference never moves"))
 def commit_mix(ctx: StageCtx, cout: CohortOut, mixed, hot, nhot) -> SyncOut:
     """Gossip's commit: every learner adopts its mixing-row combination;
     transfers occupy BOTH endpoints' links; the reference never moves

@@ -78,7 +78,10 @@ def ssd_scan(x, dt, a, b, c, *, chunk: int = 64, interpret: bool = True):
     S must be a chunk multiple (callers pad)."""
     BH, S, P = x.shape
     N = b.shape[-1]
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(
+            f"sequence length must be a chunk multiple (callers pad): "
+            f"S={S}, chunk={chunk}")
     nc = S // chunk
     y, h = pl.pallas_call(
         functools.partial(_ssd_kernel, num_chunks=nc),

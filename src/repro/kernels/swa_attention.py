@@ -68,7 +68,10 @@ def swa_attention(q, k, v, *, window: int, scale: float | None = None,
     Causal sliding-window attention (window == block size): each query
     attends to the ``window`` most recent positions including itself."""
     B, S, d = q.shape
-    assert S % window == 0 and S >= window, (S, window)
+    if S % window != 0 or S < window:
+        raise ValueError(
+            f"sequence length must be a multiple of the window and at "
+            f"least one window long: S={S}, window={window}")
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     nb = S // window

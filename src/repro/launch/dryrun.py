@@ -155,7 +155,8 @@ def main():
         else:
             jobs = [(a, s) for a in ASSIGNED_ARCHS for s in pairs_for(a)]
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            raise SystemExit("--arch/--shape or --all")
         jobs = [(args.arch, args.shape)]
 
     failures = []

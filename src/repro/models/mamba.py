@@ -68,7 +68,10 @@ def _ssd_chunked(xh, dt, A, B_, C_, chunk: int):
     Bb, S, H, P = xh.shape
     G = B_.shape[2]
     N = B_.shape[3]
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(
+            f"sequence length must be a chunk multiple: S={S}, "
+            f"chunk={chunk}")
     nc = S // chunk
     rep = H // G
 

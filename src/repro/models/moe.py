@@ -69,7 +69,10 @@ def moe_apply(cfg: ModelConfig, params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
     B, S, D = x.shape
     K, E = m.num_experts_per_tok, m.num_experts
     g = min(S, MOE_GROUP_TOKENS)
-    assert (B * S) % g == 0, (B, S, g)
+    if (B * S) % g != 0:
+        raise ValueError(
+            f"token count B*S={B * S} must divide into MoE routing "
+            f"groups of {g} tokens")
     G = (B * S) // g
     xt = x.reshape(G, g, D)
     xt = constrain(xt, ("batch", None, None))

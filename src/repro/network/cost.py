@@ -39,8 +39,11 @@ LINK_CLASSES = {
 # configs validate names against repro.config.LINK_CLASS_NAMES; keep the
 # two registries in lockstep so config-time validation covers exactly the
 # classes this cost model can price
-assert set(LINK_CLASSES) == set(LINK_CLASS_NAMES), (
-    sorted(LINK_CLASSES), sorted(LINK_CLASS_NAMES))
+if set(LINK_CLASSES) != set(LINK_CLASS_NAMES):
+    raise RuntimeError(
+        f"link-class registries out of lockstep: cost model prices "
+        f"{sorted(LINK_CLASSES)}, configs validate against "
+        f"{sorted(LINK_CLASS_NAMES)}")
 
 
 def link_profile(net: NetworkConfig, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:

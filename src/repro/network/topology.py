@@ -99,7 +99,11 @@ def adjacency(net: NetworkConfig, m: int, t=None) -> jnp.ndarray:
         return torus(m)
     if net.topology == TOPO_ERDOS_RENYI:
         return erdos_renyi(key, m, net.er_p)
-    assert net.topology == TOPO_GEOMETRIC, net.topology
+    if net.topology != TOPO_GEOMETRIC:
+        raise KeyError(
+            f"unknown topology {net.topology!r} — NetworkConfig validates "
+            f"membership, so this overlay builder is out of sync with "
+            f"repro.config.TOPOLOGIES")
     if net.redraw_every > 0 and t is not None:
         key = jax.random.fold_in(key, t // net.redraw_every)
     return random_geometric(key, m, net.geo_radius)

@@ -477,18 +477,18 @@ def test_protocol_config_validation():
 
 
 def test_network_config_validation():
-    with pytest.raises(AssertionError):
+    with pytest.raises(KeyError):
         NetworkConfig(topology="full-mesh-of-dreams")
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         NetworkConfig(act_prob=0.0)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         NetworkConfig(outage_every=5, outage_length=0)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         # an outage outlasting its period would be a permanent blackout
         NetworkConfig(outage_every=3, outage_length=5)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         NetworkConfig(link_classes=())
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         # mobility only applies to the geometric graph
         NetworkConfig(topology="ring", redraw_every=10)
     assert NetworkConfig().full_availability

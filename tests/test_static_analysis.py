@@ -1,0 +1,309 @@
+"""The static-analysis gate: contract checker, jaxpr auditor, repo lint.
+
+Two halves: the REAL repo must pass every analyzer clean (the CI gate's
+contract), and deliberately-broken fixture stages must each be caught by
+the rule built for them — a checker that never fires is worse than none.
+Fixture stages register into the global registries, so every registering
+test runs inside the snapshot/restore fixture."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.sync  # noqa: F401 — populate the stage registries
+import repro.core.sync.registry as reg
+from repro.analysis import audit, contracts, lint
+from repro.analysis.__main__ import main as analysis_main
+from repro.core.sync.registry import (
+    CohortOut, CommRecord, StageContract, SyncOut, register_aggregate,
+    register_commit, register_trigger,
+)
+from repro.core.sync.spec import LAYOUTS, ProtocolSpec
+
+
+_REGISTRIES = ("TRIGGERS", "COHORTS", "AGGREGATES", "COMMITS", "PROTOCOLS")
+
+
+@pytest.fixture
+def registry_sandbox():
+    """Registrations are global and permanent; snapshot the four stage
+    registries (+ presets) and restore them after the test so fixture
+    stages never leak into the hypothesis-over-registry tests."""
+    saved = {n: dict(getattr(reg, n)) for n in _REGISTRIES}
+    try:
+        yield reg
+    finally:
+        for n, d in saved.items():
+            live = getattr(reg, n)
+            live.clear()
+            live.update(d)
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is clean
+# ---------------------------------------------------------------------------
+
+def test_every_registered_stage_declares_a_contract():
+    assert contracts.check_registry() == []
+
+
+def test_contract_matrix_clean_all_presets_all_layouts():
+    findings = contracts.check_preset_matrix()
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_audit_clean_all_presets():
+    findings = audit.audit_presets()
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_lint_clean_repo():
+    findings = lint.lint_paths()
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_check_all_exits_zero():
+    assert analysis_main(["--check-all"]) == 0
+
+
+def test_layout_equivalence_every_preset():
+    """tree and flat compile to abstractly identical StageResult trees
+    for every registered preset — the conformance matrix a future
+    sharded layout joins via spec.LAYOUTS."""
+    assert len(LAYOUTS) >= 2
+    for name in sorted(reg.PROTOCOLS):
+        f = contracts.check_layout_equivalence(reg.get_protocol(name))
+        assert f == [], "\n".join(x.render() for x in f)
+
+
+# ---------------------------------------------------------------------------
+# broken fixtures: each rule catches the bug built for it
+# ---------------------------------------------------------------------------
+
+def test_wrong_dtype_aggregate_is_caught(registry_sandbox):
+    """An aggregate that silently promotes every leaf to f32 violates its
+    out='model' contract on the mixed f32+bf16 template."""
+    @register_aggregate("fx_f32_mean", contract=StageContract(
+        summary="broken: promotes to f32", out="model"))
+    def bad_agg(ctx, cout):
+        mean = jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                            ctx.stacked)
+        return jax.tree.map(lambda x: x.astype(jnp.float32), mean)
+
+    spec = ProtocolSpec(trigger="cadence", cohort="all_reachable",
+                        aggregate="fx_f32_mean", commit="average",
+                        name="fx-f32")
+    findings = contracts.check_spec(spec)
+    rules = {f.rule for f in findings}
+    assert "aggregate-out" in rules, [f.render() for f in findings]
+    # and the compiled round leaks the promotion into the scan carry
+    assert any(f.rule in ("round-params", "trace-error")
+               for f in contracts.check_round(spec))
+
+
+def test_undeclared_counter_owner_is_caught(registry_sandbox):
+    """A cohort returning v without declaring manages_v is flagged."""
+    @reg.register_cohort("fx_rogue_v", provides=("full-cohort",),
+                         contract=StageContract(summary="broken: rogue v"))
+    def rogue(ctx, hot, nhot, rng):
+        from repro.core.sync.stages import cohort_all
+        return CohortOut(mask=cohort_all(ctx.m, ctx.active), rng=rng,
+                         v=jnp.int32(0), full=jnp.asarray(False))
+
+    spec = ProtocolSpec(trigger="cadence", cohort="fx_rogue_v",
+                        name="fx-rogue")
+    rules = {f.rule for f in contracts.check_spec(spec)}
+    assert "counter-owner" in rules
+
+
+def test_int32_ledger_accumulator_is_caught(registry_sandbox):
+    """A trigger carrying an int32 per-learner byte counter that grows by
+    a data-dependent amount with no reset: exactly the silent-wrap bug
+    the int64 host-side ledger exists to avoid."""
+    @register_trigger(
+        "fx_bytes", params={"b": 1},
+        init_extra=lambda p, m: {"bytes": jnp.zeros((m,), jnp.int32)},
+        commit_extra=lambda ctx, mask:
+            {"bytes": ctx.state.extra["bytes"]
+             + mask.astype(jnp.int32) * 1000},
+        skip_extra=lambda ctx: ctx.state.extra,
+        contract=StageContract(summary="broken: int32 byte ledger",
+                               extra_state=(("bytes", "int32"),)))
+    def gate(ctx):
+        return (ctx.t % ctx.params["b"]) == 0
+
+    spec = ProtocolSpec(trigger="fx_bytes", name="fx-bytes")
+    findings = audit.audit_spec(spec)
+    assert any(f.rule == "int32-accumulator" for f in findings), \
+        [f.render() for f in findings]
+    # the contract checker accepts it (shapes/dtypes are consistent):
+    # wrapping is a PROGRAM property, which is the auditor's job
+    assert contracts.check_spec(spec) == []
+
+
+def test_callback_in_scan_is_caught(registry_sandbox):
+    @register_trigger("fx_chatty", params={"b": 1},
+                      contract=StageContract(summary="broken: host debug"))
+    def gate(ctx):
+        jax.debug.print("t={t}", t=ctx.t)
+        return (ctx.t % ctx.params["b"]) == 0
+
+    spec = ProtocolSpec(trigger="fx_chatty", name="fx-chatty")
+    findings = audit.audit_spec(spec)
+    assert any(f.rule == "callback-in-scan" for f in findings), \
+        [f.render() for f in findings]
+
+
+def test_missing_contract_is_caught(registry_sandbox):
+    @register_commit("fx_bare", needs=("full-cohort",))
+    def bare_commit(ctx, cout, mean, hot, nhot):
+        return SyncOut(ctx.stacked, ctx.state.ref, ctx.state.v, cout.rng,
+                       ctx.state.extra, CommRecord.zero(),
+                       jnp.zeros((ctx.m,), jnp.int32),
+                       jnp.zeros((ctx.m,), jnp.int32))
+
+    findings = contracts.check_registry()
+    assert any(f.rule == "missing-contract" and "fx_bare" in f.where
+               for f in findings)
+
+
+def test_extra_state_declaration_mismatch_is_caught(registry_sandbox):
+    @register_trigger(
+        "fx_wrong_decl", params={"b": 1},
+        init_extra=lambda p, m: {"age": jnp.zeros((m,), jnp.int32)},
+        contract=StageContract(summary="broken: declares float32",
+                               extra_state=(("age", "float32"),)))
+    def gate(ctx):
+        return (ctx.t % ctx.params["b"]) == 0
+
+    findings = contracts.check_registry()
+    assert any(f.rule == "extra-state" and "fx_wrong_decl" in f.where
+               for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# auditor unit rules (no registries involved)
+# ---------------------------------------------------------------------------
+
+def test_audit_flags_data_dependent_int32_carry():
+    def chunk(x):
+        def body(carry, _):
+            acc, y = carry
+            return (acc + jnp.sum(y).astype(jnp.int32), y * 2), ()
+        return jax.lax.scan(body, (jnp.int32(0), x), None, length=4)
+
+    findings = audit.audit_fn(chunk, jax.ShapeDtypeStruct((3,), jnp.float32))
+    assert any(f.rule == "int32-accumulator" for f in findings)
+
+
+def test_audit_exempts_clock_and_reset_counters():
+    """The engine's own idioms must stay clean: a literal-step clock and
+    a counter reset through jnp.where."""
+    def chunk(x):
+        def body(carry, _):
+            t, v, y = carry
+            vn = v + jnp.sum(y > 0).astype(jnp.int32)
+            vn = jnp.where(vn >= 3, jnp.int32(0), vn)
+            return (t + 1, vn, y * 0.5), ()
+        return jax.lax.scan(body, (jnp.int32(0), jnp.int32(0), x), None,
+                            length=4)
+
+    assert audit.audit_fn(chunk,
+                          jax.ShapeDtypeStruct((3,), jnp.float32)) == []
+
+
+def test_audit_flags_float64_leak():
+    def leak(x):
+        return x.astype(jnp.float64) * 2
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        findings = audit.audit_fn(leak,
+                                  jax.ShapeDtypeStruct((3,), jnp.float32))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    assert any(f.rule == "float64-leak" for f in findings)
+
+
+def test_audit_hlo_text_backend():
+    hlo = """HloModule m
+  %p = f64[128]{0} parameter(0)
+  %cc = f32[4]{0} custom-call(), custom_call_target="xla_python_cpu_callback"
+"""
+    rules = {f.rule for f in audit.audit_hlo(hlo)}
+    assert "float64-leak" in rules
+    assert "host-callback" in rules
+
+
+# ---------------------------------------------------------------------------
+# lint rules on source fixtures
+# ---------------------------------------------------------------------------
+
+def test_lint_bare_assert_and_version_probe():
+    src = "import jax\ndef f(x):\n    assert x > 0\n    return jax.__version__\n"
+    rules = {f.rule for f in lint.lint_source(src, "pkg/module.py")}
+    assert rules == {"bare-assert", "jax-version"}
+    # the same probe is LEGAL in the compat shim
+    assert not any(f.rule == "jax-version"
+                   for f in lint.lint_source(src, "pkg/compat.py"))
+
+
+def test_lint_network_purity():
+    clean = "import jax\nkey = jax.random.fold_in(jax.random.PRNGKey(0), 3)\n"
+    assert lint.lint_source(clean, "repro/network/avail.py") == []
+    for bad in ("import time\n", "import random\n",
+                "import numpy as np\nx = np.random\n",
+                "import jax\nk = jax.random.split\n",
+                "def f():\n    global _state\n"):
+        findings = lint.lint_source(bad, "repro/network/avail.py")
+        assert any(f.rule == "network-impure" for f in findings), bad
+        # identical source outside network/ is unconstrained
+        assert not any(f.rule == "network-impure"
+                       for f in lint.lint_source(bad, "repro/core/x.py"))
+
+
+def test_lint_register_without_contract():
+    src = "register_trigger('x', params={'b': 1})(lambda ctx: False)\n"
+    assert any(f.rule == "contract-required"
+               for f in lint.lint_source(src, "pkg/stages.py"))
+    ok = ("register_trigger('x', contract=StageContract(summary='s'))"
+          "(lambda ctx: False)\n")
+    assert lint.lint_source(ok, "pkg/stages.py") == []
+
+
+def test_lint_syntax_error_is_a_finding_not_a_crash():
+    findings = lint.lint_source("def f(:\n", "pkg/broken.py")
+    assert [f.rule for f in findings] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# the CLI gate
+# ---------------------------------------------------------------------------
+
+def test_cli_lint_nonzero_on_fixture(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(x):\n    assert x\n")
+    assert analysis_main(["--lint", str(bad)]) == 1
+    good = tmp_path / "good.py"
+    good.write_text("def f(x):\n    return x\n")
+    assert analysis_main(["--lint", str(good)]) == 0
+
+
+def test_cli_no_args_prints_help():
+    assert analysis_main([]) == 2
+
+
+@pytest.mark.slow
+def test_cli_subprocess_check_all():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--check-all"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
