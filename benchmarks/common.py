@@ -10,12 +10,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Callable, List
 
 from repro.config import ProtocolConfig, TrainConfig, get_arch
 from repro.data.synthetic import SyntheticMNIST
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn_params
+from repro.telemetry.trace import timed as _timed_blocked
 from repro.train.loop import run_protocol_training
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -55,9 +55,11 @@ def save_rows(name: str, rows: List[dict]) -> str:
 
 
 def timed(fn: Callable):
-    t0 = time.time()
-    out = fn()
-    return out, time.time() - t0
+    """``(result, seconds)`` — ``perf_counter`` around a call that blocks
+    on its result (``jax.block_until_ready``). The old ``time.time()``
+    version returned before async dispatch finished, so it timed the
+    Python overhead of launching the work, not the work."""
+    return _timed_blocked(fn)
 
 
 def fmt_bytes(n) -> str:

@@ -23,10 +23,10 @@ PAPER_REF = "kernels/ (sqdist = the protocol's local-condition hot spot)"
 
 def _time(fn, *args, iters=5):
     fn(*args)                      # compile/warm
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6     # us
+    return (time.perf_counter() - t0) / iters * 1e6     # us
 
 
 def run(quick: bool = True):

@@ -59,10 +59,12 @@ ALL = [
 
 
 def run_protocol_spec(path: str, full: bool = False, m: int = 8,
-                      seed: int = 0) -> dict:
+                      seed: int = 0, telemetry: str = None) -> dict:
     """Drive one serialized ``ProtocolSpec`` through the scanned engine
-    (drift-MLP smoke task) and report loss/communication."""
-    from repro.config import TrainConfig, get_arch
+    (drift-MLP smoke task) and report loss/communication. ``telemetry``
+    streams the run's per-round records to that JSONL path
+    (``repro.telemetry``)."""
+    from repro.config import TelemetryConfig, TrainConfig, get_arch
     from repro.core.sync.spec import ProtocolSpec
     from repro.data.synthetic import GraphicalModelStream
     from repro.models.cnn import cnn_loss, init_cnn_params
@@ -71,13 +73,18 @@ def run_protocol_spec(path: str, full: bool = False, m: int = 8,
     spec = ProtocolSpec.from_file(path)
     rounds = 2000 if full else 200
     cfg = get_arch("drift_mlp", smoke=True)
+    telem = (TelemetryConfig(path=telemetry, per_link=True, profile=True)
+             if telemetry else None)
     dl, traj = run_protocol_training(
         lambda p, b: cnn_loss(cfg, p, b),
         lambda k: init_cnn_params(cfg, k),
         GraphicalModelStream(seed=0, drift_prob=0.0),
         m=m, rounds=rounds, protocol=spec,
         train=TrainConfig(optimizer="sgd", learning_rate=0.05),
-        batch=10, seed=seed, record_every=max(1, rounds // 10))
+        batch=10, seed=seed, record_every=max(1, rounds // 10),
+        telemetry=telem)
+    if dl.recorder is not None:
+        dl.recorder.close()
     row = {
         "spec": spec.to_dict(),
         "m": m,
@@ -105,7 +112,14 @@ def main() -> None:
     ap.add_argument("--protocol", default=None, metavar="SPEC_JSON",
                     help="run a serialized ProtocolSpec through the scan "
                          "driver and report loss/comm")
+    ap.add_argument("--telemetry", default=None, metavar="JSONL",
+                    help="with --protocol: stream per-round telemetry "
+                         "records to this JSONL file (repro.telemetry)")
     args = ap.parse_args()
+
+    if args.telemetry and not args.protocol:
+        ap.error("--telemetry requires --protocol (it instruments the "
+                 "spec run)")
 
     if args.list:
         for mod in ALL:
@@ -115,22 +129,25 @@ def main() -> None:
     if args.protocol:
         import re
         from benchmarks.common import save_rows
-        t0 = time.time()
-        row = run_protocol_spec(args.protocol, full=args.full)
+        t0 = time.perf_counter()
+        row = run_protocol_spec(args.protocol, full=args.full,
+                                telemetry=args.telemetry)
         name = re.sub(r"[^\w.-]", "_", row["spec"]["name"]) or "custom"
         print(f"=== protocol_spec  [{args.protocol}] ===")
         for k, v in row.items():
             if not isinstance(v, (list, dict)):
                 print(f"  {k}={v}")
         path = save_rows(f"protocol_spec_{name}", [row])
-        print(f"  -> saved {path} ({time.time() - t0:.1f}s)")
+        if args.telemetry:
+            print(f"  -> telemetry {args.telemetry}")
+        print(f"  -> saved {path} ({time.perf_counter() - t0:.1f}s)")
         return
 
     summary = []
     for mod in ALL:
         if args.only and args.only not in mod.NAME:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         print(f"\n=== {mod.NAME}  [{mod.PAPER_REF}] ===", flush=True)
         try:
             rows = mod.run(quick=not args.full)
@@ -143,7 +160,7 @@ def main() -> None:
             import traceback
             traceback.print_exc()
             verdict = f"ERROR:{e!r}"
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         print(f"  -> {verdict} ({dt:.1f}s)")
         summary.append((mod.NAME, dt, verdict))
 

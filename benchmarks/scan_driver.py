@@ -69,14 +69,14 @@ def run(quick: bool = True):
 
     # --- cold runs (jit compile included) + equivalence check -----------
     streams_loop, dl_loop = _make(loss_fn, init_fn)
-    t0 = time.time()
+    t0 = time.perf_counter()
     _loop_rounds(streams_loop, dl_loop, rounds)
-    cold_loop = time.time() - t0
+    cold_loop = time.perf_counter() - t0
 
     streams_scan, dl_scan = _make(loss_fn, init_fn)
-    t0 = time.time()
+    t0 = time.perf_counter()
     _scan_rounds(streams_scan, dl_scan, rounds)
-    cold_scan = time.time() - t0
+    cold_scan = time.perf_counter() - t0
 
     comm_equal = dl_loop.comm_totals == dl_scan.comm_totals
     loss_rel = abs(dl_loop.cumulative_loss - dl_scan.cumulative_loss) / max(
@@ -89,12 +89,12 @@ def run(quick: bool = True):
     # --- steady state: each driver keeps running on ITS OWN stream (same
     # seed, identical history, jit + sampler caches warm), so both time
     # the same per-round workload from numerically equivalent states
-    t0 = time.time()
+    t0 = time.perf_counter()
     _loop_rounds(streams_loop, dl_loop, rounds)
-    warm_loop = time.time() - t0
-    t0 = time.time()
+    warm_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
     _scan_rounds(streams_scan, dl_scan, rounds)
-    warm_scan = time.time() - t0
+    warm_scan = time.perf_counter() - t0
 
     rows = [{
         "rounds": rounds,

@@ -26,6 +26,13 @@ within float-reassociation tolerance.
 Rows (persisted as experiments/bench/sync_bench.json, uploaded nightly
 as the BENCH_sync artifact): m, layout, steady-state round_ms, cohort,
 speedup (flat rows, vs the tree round), per_iter_ms (flat rows).
+
+The run also records a SHORT instrumented drift-MLP protocol run with
+the telemetry plane attached (``repro.telemetry``): the raw JSONL
+stream lands at experiments/bench/sync_bench_telemetry.jsonl and its
+observatory run card at experiments/bench/sync_bench_frontier.json —
+both uploaded nightly as the TELEM_sync artifact. The ``telemetry``
+row carries the exactness check (stream totals == engine counters).
 """
 from __future__ import annotations
 
@@ -85,10 +92,10 @@ def _time(fn, stacked, state, reps: int) -> float:
     identical augmentation trip count every rep)."""
     best = float("inf")
     for _ in range(reps):
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = fn(stacked, state)
         jax.block_until_ready(res.params)
-        best = min(best, time.time() - t0)
+        best = min(best, time.perf_counter() - t0)
     return best
 
 
@@ -152,8 +159,59 @@ def run(quick: bool = True):
                 / max(1, extra_iters) * 1e3, 3)
             del res
         del stacked, ref
+    rows.append(_telemetry_run(quick))
     save_rows(NAME, rows)
     return rows
+
+
+def _telemetry_run(quick: bool) -> dict:
+    """Record a short instrumented protocol run and summarize it from the
+    JSONL alone — the comm-vs-loss observatory over the same sync path
+    the kernel rows time. Returns one ``layout="telemetry"`` row whose
+    ``stream_exact`` asserts the stream's cumulative totals equal the
+    engine's host counters bitwise."""
+    import json
+    import os
+
+    from repro.config import (ProtocolConfig, TelemetryConfig, TrainConfig,
+                              get_arch)
+    from repro.data.synthetic import GraphicalModelStream
+    from repro.models.cnn import cnn_loss, init_cnn_params
+    from repro.telemetry.observatory import load_run, summarize
+    from repro.train.loop import run_protocol_training
+
+    from benchmarks.common import OUT_DIR
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    jsonl = os.path.normpath(
+        os.path.join(OUT_DIR, "sync_bench_telemetry.jsonl"))
+    card = os.path.normpath(
+        os.path.join(OUT_DIR, "sync_bench_frontier.json"))
+    m, rounds = 8, (60 if quick else 400)
+    cfg = get_arch("drift_mlp", smoke=True)
+    dl, _ = run_protocol_training(
+        lambda p, b: cnn_loss(cfg, p, b),
+        lambda k: init_cnn_params(cfg, k),
+        GraphicalModelStream(seed=0, drift_prob=0.0),
+        m=m, rounds=rounds,
+        protocol=ProtocolConfig(kind="dynamic", b=2, delta=0.5),
+        train=TrainConfig(optimizer="sgd", learning_rate=0.05),
+        batch=10, seed=0, record_every=max(1, rounds // 10),
+        telemetry=TelemetryConfig(path=jsonl, per_link=True, profile=True))
+    dl.recorder.close()
+    run_card = summarize(load_run(jsonl))
+    with open(card, "w") as f:
+        json.dump(run_card, f, indent=1, sort_keys=True)
+    return {
+        "m": m, "layout": "telemetry", "rounds": rounds,
+        "cum_bytes": run_card["cum_bytes"],
+        "cum_syncs": run_card["cum_syncs"],
+        "stream_exact": bool(
+            run_card["cum_bytes"] == dl.comm_bytes()
+            and run_card["cum_syncs"] == dl.comm_totals["syncs"]
+            and run_card["cum_loss"] == dl.cumulative_loss),
+        "jsonl": jsonl, "card": card,
+    }
 
 
 def check(rows) -> str:

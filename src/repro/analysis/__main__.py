@@ -47,7 +47,7 @@ def main(argv=None) -> int:
         return 2
 
     findings: List[Finding] = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     if run_contracts or run_audit:
         import repro.core.sync  # noqa: F401 — populate the registries
     if run_contracts:
@@ -60,7 +60,7 @@ def main(argv=None) -> int:
         from repro.analysis.lint import lint_paths
         findings += lint_paths(args.paths or None)
 
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     if findings:
         print(render_findings(findings))
         print(f"{len(findings)} finding(s) in {dt:.1f}s", file=sys.stderr)

@@ -1,6 +1,6 @@
 """AST lint: the repo-shape rules no runtime test can enforce.
 
-Four rules over ``src/repro`` (pure ``ast`` — no imports of the linted
+Five rules over ``src/repro`` (pure ``ast`` — no imports of the linted
 code, so a file with a syntax error is itself a finding, not a crash):
 
 * **bare-assert** — no ``assert`` statements in library code: they
@@ -13,6 +13,11 @@ code, so a file with a syntax error is itself a finding, not a crash):
   ``register_aggregate``/``register_commit`` call must pass a
   non-None ``contract=`` (the declaration ``repro.analysis.contracts``
   verifies abstractly).
+* **print-outside-cli** — no bare ``print(`` in library code: output
+  goes through ``repro.telemetry.get_logger().event(...)`` so CLIs
+  choose the formatter and library callers stay silent. Exempt:
+  ``__main__.py`` files (they ARE the CLI) and the top-level ``main()``
+  of ``launch/`` entry-point modules.
 * **network-impure** — modules under ``repro/network/`` must be pure
   functions of ``(seed, t)``: no wall-clock (``time``/``datetime``), no
   stateful RNG (``random``, ``secrets``, ``numpy.random``), no carried
@@ -57,6 +62,23 @@ def _is_network(path: str) -> bool:
     return "network" in parts
 
 
+def _is_main_file(path: str) -> bool:
+    return os.path.basename(path) == "__main__.py"
+
+
+def _is_launch(path: str) -> bool:
+    parts = path.replace(os.sep, "/").split("/")
+    return "launch" in parts
+
+
+def _main_ranges(tree: ast.Module):
+    """Line spans of top-level ``def main`` — the CLI entry points where
+    ``print`` is legitimate in a ``launch/`` module."""
+    return [(f.lineno, f.end_lineno or f.lineno)
+            for f in tree.body
+            if isinstance(f, ast.FunctionDef) and f.name == "main"]
+
+
 def _call_name(node: ast.Call) -> str:
     fn = node.func
     if isinstance(fn, ast.Name):
@@ -94,6 +116,9 @@ def lint_source(src: str, path: str = "<string>") -> List[Finding]:
 
     compat = _is_compat(path)
     network = _is_network(path)
+    cli_file = _is_main_file(path)
+    main_spans = (_main_ranges(tree)
+                  if _is_launch(path) and not cli_file else [])
     for node in ast.walk(tree):
         if isinstance(node, ast.Assert):
             bad("bare-assert", node,
@@ -112,6 +137,14 @@ def lint_source(src: str, path: str = "<string>") -> List[Finding]:
                     f"topology must be pure in (seed, t); derive keys "
                     f"with jax.random.fold_in on the scalar seed")
         elif isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Name) and node.func.id == "print"
+                    and not cli_file
+                    and not any(lo <= node.lineno <= hi
+                                for lo, hi in main_spans)):
+                bad("print-outside-cli", node,
+                    "bare print() in library code — emit a structured "
+                    "event via repro.telemetry.get_logger().event(...) "
+                    "and let the CLI attach console_handler()")
             if _call_name(node) in REGISTER_FUNCS:
                 kw = {k.arg: k.value for k in node.keywords}
                 contract = kw.get("contract")

@@ -12,6 +12,7 @@ much of the compiled compute is useful.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -99,6 +100,117 @@ def analyze(name: str, compiled, num_devices: int,
         bottleneck=bottleneck, model_flops=model_flops,
         useful_fraction=useful, collectives=stats.summary(),
         memory_stats=mem)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level FLOP estimation (static, pre-compilation)
+# ---------------------------------------------------------------------------
+#
+# ``analyze`` above costs a COMPILED executable; the telemetry plane's
+# cost attribution (repro.telemetry.costs) needs per-BRANCH costs of an
+# uncompiled round — how much compute the sync branch of the protocol's
+# ``lax.cond`` would burn vs. its skip branch — which only the jaxpr still
+# exposes (XLA folds the branches into one module). This is a first-order
+# traversal: matmuls/convs counted exactly, reductions and elementwise ops
+# at one FLOP per element, control flow by its trip count/worst branch.
+
+def _size(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return 0
+    return math.prod(shape) if shape else 1
+
+
+def _out_size(eqn) -> int:
+    return sum(_size(getattr(v, "aval", None)) for v in eqn.outvars)
+
+
+def _sub_jaxprs(params):
+    """Every sub-jaxpr referenced by one equation's params."""
+    subs = []
+    for val in params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            if hasattr(v, "jaxpr"):          # ClosedJaxpr
+                subs.append(v.jaxpr)
+            elif hasattr(v, "eqns"):         # raw Jaxpr
+                subs.append(v)
+    return subs
+
+
+def _dot_general_flops(eqn) -> float:
+    (lc, rc), (lb, _rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    batch = math.prod(lhs[i] for i in lb) if lb else 1
+    contract = math.prod(lhs[i] for i in lc) if lc else 1
+    lfree = math.prod(d for i, d in enumerate(lhs)
+                      if i not in lb and i not in lc)
+    rfree = math.prod(d for i, d in enumerate(rhs)
+                      if i not in _rb and i not in rc)
+    return 2.0 * batch * contract * lfree * rfree
+
+
+def _conv_flops(eqn) -> float:
+    out = _size(eqn.outvars[0].aval)
+    rhs = eqn.invars[1].aval.shape
+    dn = eqn.params.get("dimension_numbers")
+    out_ch = rhs[dn.rhs_spec[0]] if dn is not None else rhs[-1]
+    # each output element = one dot over the kernel's in-features window
+    return 2.0 * out * (math.prod(rhs) / max(out_ch, 1))
+
+
+_REDUCE_PRIMS = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "cumsum", "cumlogsumexp", "cummax",
+    "cummin", "cumprod",
+})
+
+# structural primitives that only forward values — no arithmetic
+_FREE_PRIMS = frozenset({
+    "broadcast_in_dim", "reshape", "transpose", "squeeze", "slice",
+    "dynamic_slice", "dynamic_update_slice", "concatenate", "convert_element_type",
+    "copy", "gather", "scatter", "rev", "pad", "iota", "stop_gradient",
+    "split",
+})
+
+
+def _eqn_flops(eqn) -> float:
+    name = eqn.primitive.name
+    params = eqn.params
+    if name == "scan":
+        body = params.get("jaxpr")
+        return params.get("length", 1) * jaxpr_flops(body)
+    if name == "while":
+        # trip count is dynamic: count one body + one cond evaluation
+        return (jaxpr_flops(params.get("body_jaxpr"))
+                + jaxpr_flops(params.get("cond_jaxpr")))
+    if name == "cond":
+        return max((jaxpr_flops(b) for b in params.get("branches", ())),
+                   default=0.0)
+    if name == "dot_general":
+        return _dot_general_flops(eqn)
+    if name == "conv_general_dilated":
+        return _conv_flops(eqn)
+    if name in _REDUCE_PRIMS:
+        return float(_size(eqn.invars[0].aval))
+    if name in _FREE_PRIMS:
+        return 0.0
+    subs = _sub_jaxprs(params)
+    if subs:          # pjit / remat / custom_* / closed_call wrappers
+        return sum(jaxpr_flops(s) for s in subs)
+    # elementwise default: one FLOP per output element
+    return float(_out_size(eqn))
+
+
+def jaxpr_flops(jaxpr) -> float:
+    """First-order FLOP estimate of a jaxpr (``ClosedJaxpr`` or raw
+    ``Jaxpr``): matmul/conv exactly, reductions/elementwise at one FLOP
+    per element, ``scan`` by trip count, ``cond`` by its worst branch."""
+    if jaxpr is None:
+        return 0.0
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    return float(sum(_eqn_flops(e) for e in jx.eqns))
 
 
 def format_table(reports) -> str:

@@ -89,14 +89,19 @@ def _sync_dict(sync_state) -> dict:
 
 
 def save_protocol_state(path: str, params, opt_state, sync_state,
-                        protocol=None) -> None:
+                        protocol=None, counters=None) -> None:
     """Persist a run. ``protocol`` (a ``ProtocolConfig`` or
     ``ProtocolSpec``) additionally writes ``<path>.spec.json`` — the
     serialized ``ProtocolSpec`` — so a restore reconstructs the exact
     protocol, not just its state. A hierarchical config
     (``ProtocolConfig.tiers``) writes an extended sidecar
     ``{"spec": <intra>, "tiers": {"num_clusters", "link_class",
-    "inter": <spec>}}`` so the tier structure survives too."""
+    "inter": <spec>}}`` so the tier structure survives too.
+
+    ``counters`` (``DecentralizedLearner.counters_state()``) writes
+    ``<path>.counters.json`` — the cumulative host counters — so a
+    resumed run continues its telemetry stream as ONE continuous record
+    (``load_counters`` + ``DecentralizedLearner.restore_counters``)."""
     from repro.core.sync.hierarchy import HierSyncState
     save_pytree(path + ".params.npz", params)
     save_pytree(path + ".opt.npz", opt_state)
@@ -126,6 +131,10 @@ def save_protocol_state(path: str, params, opt_state, sync_state,
             }, indent=1, sort_keys=True)
         with open(path + ".spec.json", "w") as f:
             f.write(blob)
+    if counters is not None:
+        import json
+        with open(path + ".counters.json", "w") as f:
+            json.dump(counters, f, indent=1, sort_keys=True)
 
 
 def _sync_state(d):
@@ -171,6 +180,21 @@ def load_protocol_tiers(path: str):
     tiers = dict(d["tiers"])
     tiers["inter"] = ProtocolSpec.from_dict(tiers["inter"])
     return tiers
+
+
+def load_counters(path: str):
+    """The cumulative-counter snapshot saved next to a checkpoint
+    (``counters=`` in :func:`save_protocol_state`), or None for
+    checkpoints written without one. Feed it to
+    ``DecentralizedLearner.restore_counters`` so a resumed run's
+    counters — and its telemetry stream — continue where the
+    checkpointed run stopped."""
+    import json
+    counters_path = path + ".counters.json"
+    if not os.path.exists(counters_path):
+        return None
+    with open(counters_path) as f:
+        return json.load(f)
 
 
 def _read_sidecar(path: str):

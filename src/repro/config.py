@@ -492,6 +492,45 @@ class NetworkConfig:
 
 
 # ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TelemetryConfig:
+    """The fleet telemetry plane (``repro.telemetry``).
+
+    Attaching one to a ``DecentralizedLearner`` (directly or via
+    ``run_protocol_training(telemetry=...)`` /
+    ``benchmarks/run.py --telemetry``) streams a schema'd round record
+    per executed round — loss, divergence, trigger accounting, cohort
+    size, reachability, simulated net-time, exact cumulative bytes — to
+    ``path`` as JSONL, with the newest ``ring`` records also held in
+    memory. Records are materialized host-side from the per-chunk fold
+    the engine already fetches: zero extra device work, zero extra
+    transfers. No config (``telemetry=None``) leaves the engine
+    bitwise-identical to the untelemetered path.
+
+    ``per_link`` adds the per-link byte vector to every round record
+    (L integers per round — sizeable for large fleets, hence opt-in).
+    ``profile`` adds wall-clock + recompile accounting per chunk
+    (``perf_counter`` around a blocked dispatch). ``jax_profiler`` wraps
+    each chunk in a ``jax.profiler`` step annotation so chunks show up
+    named in a profiler trace (no-op unless a trace is active).
+    """
+    path: Optional[str] = None    # JSONL sink; None = ring buffer only
+    append: bool = False          # append to path (checkpoint resume)
+    ring: int = 1024              # in-memory ring capacity (records)
+    per_link: bool = False        # per-link bytes on every round record
+    profile: bool = False         # wall-clock + recompile spans per chunk
+    jax_profiler: bool = False    # jax.profiler step annotations
+
+    def __post_init__(self):
+        if self.ring < 1:
+            raise ValueError(
+                f"ring must hold >= 1 record, got {self.ring!r}")
+
+
+# ---------------------------------------------------------------------------
 # Training
 # ---------------------------------------------------------------------------
 

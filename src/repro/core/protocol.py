@@ -38,14 +38,18 @@ aggregator-uplink rows priced at the inter tier's payload size.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import time
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import NetworkConfig, ProtocolConfig, TrainConfig
+from repro.config import (
+    NetworkConfig, ProtocolConfig, TelemetryConfig, TrainConfig,
+)
 from repro.core import operators as ops
 from repro.core.divergence import divergence, flat_size
 from repro.core.sync.hierarchy import (
@@ -93,6 +97,7 @@ class DecentralizedLearner:
         sample_weights: Optional[jnp.ndarray] = None,
         track_divergence: bool = False,
         network: Optional[NetworkConfig] = None,
+        telemetry: Optional[TelemetryConfig] = None,
     ):
         self.m = m
         self.protocol = protocol
@@ -201,6 +206,30 @@ class DecentralizedLearner:
         self._fold_step = jax.jit(self._make_fold(chunked=False))
         self._fold_chunk = jax.jit(self._make_fold(chunked=True))
 
+        # telemetry plane (repro.telemetry): a recorder streaming one
+        # schema'd record per round, materialized from the SAME per-chunk
+        # fold fetch — the telemetry=None path above is untouched (and
+        # stays bitwise vs the goldens)
+        self.telemetry = telemetry
+        self.recorder = None
+        self._profiler = None
+        if telemetry is not None:
+            from repro.telemetry.recorder import RoundRecorder
+            from repro.telemetry.trace import ChunkProfiler
+            self._profiler = ChunkProfiler()
+            self.recorder = RoundRecorder(
+                telemetry, m=m, num_links=self.num_links,
+                model_size=self.model_size, model_bytes=self.model_bytes,
+                msg_bytes=self.msg_bytes,
+                link_payload_bytes=self.link_payload_bytes,
+                link_classes=self.link_class_names(),
+                spec=self.spec.to_dict(),
+                tiers=self._tiers_meta())
+            self._fold_step_t = jax.jit(
+                self._make_fold(chunked=False, telemetry=True))
+            self._fold_chunk_t = jax.jit(
+                self._make_fold(chunked=True, telemetry=True))
+
     # ------------------------------------------------------------------
     def _make_step(self):
         loss_fn, opt = self.loss_fn, self.opt
@@ -308,17 +337,23 @@ class DecentralizedLearner:
         return chunk
 
     # ------------------------------------------------------------------
-    def _make_fold(self, chunked: bool):
+    def _make_fold(self, chunked: bool, telemetry: bool = False):
         """The host-counter fold as ONE device program: every per-call
         reduction the cumulative counters need, computed on device and
         fetched in a single transfer — ``step``/``run_chunk`` used to pay
         ~6 separate ``float(...)``/``int(...)``/``np.asarray(...)``
-        device syncs per call."""
+        device syncs per call.
+
+        With ``telemetry`` the fold additionally carries the PER-ROUND
+        series the recorder materializes records from (``per_round``: a
+        dict of (n, ...) arrays) — still one device program and one
+        transfer; the ``telemetry=False`` program is byte-identical to
+        the pre-telemetry fold."""
         fields = ops.CommRecord._fields
 
         def fold(metrics: ProtocolMetrics):
             if chunked:     # leaves carry a leading round axis: reduce it
-                return {
+                out = {
                     "loss": jnp.sum(metrics.loss_per_learner),
                     "loss_per_learner": jnp.sum(
                         metrics.loss_per_learner, axis=0),
@@ -329,15 +364,29 @@ class DecentralizedLearner:
                     "link_xfers": jnp.sum(metrics.link_xfers, axis=0),
                     "link_counts": jnp.sum(metrics.link_counts, axis=0),
                 }
-            return {
-                "loss": jnp.sum(metrics.loss_per_learner),
-                "loss_per_learner": metrics.loss_per_learner,
-                "comm": {k: getattr(metrics.comm, k) for k in fields},
-                "net_time": metrics.net_time,
-                "num_active": metrics.num_active,
-                "link_xfers": metrics.link_xfers,
-                "link_counts": metrics.link_counts,
-            }
+            else:
+                out = {
+                    "loss": jnp.sum(metrics.loss_per_learner),
+                    "loss_per_learner": metrics.loss_per_learner,
+                    "comm": {k: getattr(metrics.comm, k) for k in fields},
+                    "net_time": metrics.net_time,
+                    "num_active": metrics.num_active,
+                    "link_xfers": metrics.link_xfers,
+                    "link_counts": metrics.link_counts,
+                }
+            if telemetry:
+                # normalize the single-round case to a length-1 round axis
+                lead = (lambda x: x) if chunked else (lambda x: x[None])
+                out["per_round"] = {
+                    "loss": jnp.sum(lead(metrics.loss_per_learner), axis=1),
+                    "divergence": lead(metrics.divergence),
+                    "num_active": lead(metrics.num_active),
+                    "net_time": lead(metrics.net_time),
+                    "comm": {k: lead(getattr(metrics.comm, k))
+                             for k in fields},
+                    "link_counts": lead(metrics.link_counts),
+                }
+            return out
 
         return fold
 
@@ -345,11 +394,24 @@ class DecentralizedLearner:
         """Fold one call's (already host-side) reductions into the
         cumulative counters."""
         self.rounds += n
-        self.cumulative_loss += float(host["loss"])
+        per = host.get("per_round")
+        if per is None:
+            self.cumulative_loss += float(host["loss"])
+            self.network_time += float(host["net_time"])
+        else:
+            # telemetry attached: accumulate the float counters as the
+            # SEQUENTIAL float64 sum of the per-round series — exactly
+            # the ``base + np.cumsum`` arithmetic the recorder's cum_*
+            # columns use, so the stream's last record equals these
+            # counters bitwise (np.sum pairwise-reassociates; cumsum[-1]
+            # is the running sum)
+            self.cumulative_loss += float(
+                np.cumsum(np.asarray(per["loss"], np.float64))[-1])
+            self.network_time += float(
+                np.cumsum(np.asarray(per["net_time"], np.float64))[-1])
         self.cumulative_loss_per_learner += host["loss_per_learner"]
         for k in ops.CommRecord._fields:
             self.comm_totals[k] += int(host["comm"][k])
-        self.network_time += float(host["net_time"])
         self.active_rounds_total += int(host["num_active"])
         self.link_xfer_totals += host["link_xfers"].astype(np.int64)
         self.link_bytes_totals += self.price_link_counts(
@@ -358,6 +420,9 @@ class DecentralizedLearner:
     # ------------------------------------------------------------------
     def step(self, batches) -> ProtocolMetrics:
         """One round. ``batches``: pytree with leading (m, B, ...) leaves."""
+        if self.recorder is not None:
+            return self._run_observed(self._step, self._fold_step_t,
+                                      batches, 1)
         self.params, self.opt_state, self.sync_state, metrics = self._step(
             self.params, self.opt_state, self.sync_state, batches)
         self._accumulate(jax.device_get(self._fold_step(metrics)), 1)
@@ -380,10 +445,140 @@ class DecentralizedLearner:
         chunk size (plus at most one remainder) as ``train.loop`` does.
         """
         n = int(jax.tree.leaves(batches)[0].shape[0])
+        if self.recorder is not None:
+            return self._run_observed(self._chunk, self._fold_chunk_t,
+                                      batches, n)
         self.params, self.opt_state, self.sync_state, metrics = self._chunk(
             self.params, self.opt_state, self.sync_state, batches)
         self._accumulate(jax.device_get(self._fold_chunk(metrics)), n)
         return metrics
+
+    # ------------------------------------------------------------------
+    def _run_observed(self, compute, fold, batches, n: int):
+        """The telemetered dual of ``step``/``run_chunk``: identical
+        device programs (the round/chunk computation is byte-for-byte the
+        untelemetered one — only the fold carries the extra ``per_round``
+        reductions), ONE ``device_get`` of (fold output, trigger-carried
+        state snapshot), then host-side record materialization."""
+        cfg = self.telemetry
+        profiling = cfg.profile
+        compiled = self._profiler.begin(n) if profiling else None
+        base = self.counters_snapshot()
+        t0 = time.perf_counter() if profiling else None
+        ctx = (self._step_annotation() if cfg.jax_profiler
+               else contextlib.nullcontext())
+        with ctx:
+            self.params, self.opt_state, self.sync_state, metrics = compute(
+                self.params, self.opt_state, self.sync_state, batches)
+            # one transfer, and it blocks on the whole round program —
+            # the wall-clock below covers execution, not async dispatch
+            host, extra = jax.device_get(
+                (fold(metrics), self._state_extra()))
+        wall = time.perf_counter() - t0 if profiling else None
+        if profiling:
+            self._profiler.observe(n, wall)
+        self._accumulate(host, n)
+        self.recorder.observe(
+            host["per_round"], base, extra, n, wall_s=wall,
+            compiled=compiled,
+            recompiles=self._profiler.recompiles if profiling else None)
+        return metrics
+
+    def _step_annotation(self):
+        from repro.telemetry.trace import step_annotation
+        return step_annotation("repro_round", self.rounds)
+
+    def _state_extra(self):
+        """The trigger-declared carried state (e.g. staleness ages) as a
+        device pytree — snapshotted once per observed chunk."""
+        if self.tiers is not None:
+            return {"intra": self.sync_state.intra.extra,
+                    "inter": self.sync_state.inter.extra}
+        return self.sync_state.extra
+
+    def link_class_names(self):
+        """(L,) link-class names matching the ledger's rows: learner
+        links in round-robin ``NetworkConfig.link_classes`` order
+        (``"ideal"`` without a network), then the aggregator uplinks'
+        class under a hierarchy."""
+        if self.network is None:
+            names = ["ideal"] * self.m
+        else:
+            lc = self.network.link_classes
+            names = [lc[i % len(lc)] for i in range(self.m)]
+        if self.tiers is not None:
+            names += [self.tiers.link_class] * self.tiers.num_clusters
+        return tuple(names)
+
+    def _tiers_meta(self):
+        if self.tiers is None:
+            return None
+        return {
+            "num_clusters": self.tiers.num_clusters,
+            "link_class": self.tiers.link_class,
+            "inter": resolve_spec(self.tiers.inter).to_dict(),
+        }
+
+    # ------------------------------------------------------------------
+    def counters_snapshot(self) -> dict:
+        """The cumulative counters the telemetry plane bases its per-round
+        ``cum_*`` series on — taken BEFORE a chunk is accumulated."""
+        return {
+            "rounds": self.rounds,
+            "cumulative_loss": self.cumulative_loss,
+            "network_time": self.network_time,
+            "syncs": self.comm_totals["syncs"],
+            "cum_bytes": self.comm_bytes(),
+            "link_bytes_totals": self.link_bytes_totals.copy(),
+        }
+
+    def counters_state(self) -> dict:
+        """JSON-ready snapshot of ALL cumulative counters, for
+        checkpointing (``repro.checkpoint.io.save_protocol_state``): a
+        resumed run restores these and its telemetry stream continues as
+        one continuous record."""
+        return {
+            "rounds": int(self.rounds),
+            "cumulative_loss": float(self.cumulative_loss),
+            "cumulative_loss_per_learner": [
+                float(x) for x in self.cumulative_loss_per_learner],
+            "comm_totals": {k: int(v) for k, v in self.comm_totals.items()},
+            "network_time": float(self.network_time),
+            "active_rounds_total": int(self.active_rounds_total),
+            "link_xfer_totals": [int(x) for x in self.link_xfer_totals],
+            "link_bytes_totals": [int(x) for x in self.link_bytes_totals],
+        }
+
+    def restore_counters(self, d: dict) -> None:
+        """Restore counters saved by :meth:`counters_state`. With a
+        recorder attached, re-emits the stream's meta record tagged with
+        the resume point so the JSONL stays self-describing."""
+        if len(d["cumulative_loss_per_learner"]) != self.m:
+            raise ValueError(
+                f"counters were saved for m="
+                f"{len(d['cumulative_loss_per_learner'])} learners, "
+                f"this engine has m={self.m}")
+        if len(d["link_bytes_totals"]) != self.num_links:
+            raise ValueError(
+                f"counters were saved for {len(d['link_bytes_totals'])} "
+                f"links, this engine has {self.num_links} (did the "
+                f"hierarchy change?)")
+        unknown = sorted(set(d["comm_totals"]) - set(self.comm_totals))
+        if unknown:
+            raise ValueError(f"unknown comm counters in checkpoint: "
+                             f"{unknown}")
+        self.rounds = int(d["rounds"])
+        self.cumulative_loss = float(d["cumulative_loss"])
+        self.cumulative_loss_per_learner = np.asarray(
+            d["cumulative_loss_per_learner"], np.float32)
+        self.comm_totals = {k: int(v) for k, v in d["comm_totals"].items()}
+        self.network_time = float(d["network_time"])
+        self.active_rounds_total = int(d["active_rounds_total"])
+        self.link_xfer_totals = np.asarray(d["link_xfer_totals"], np.int64)
+        self.link_bytes_totals = np.asarray(
+            d["link_bytes_totals"], np.int64)
+        if self.recorder is not None:
+            self.recorder.resume(self.rounds)
 
     # ------------------------------------------------------------------
     def price_link_counts(self, counts: np.ndarray) -> np.ndarray:

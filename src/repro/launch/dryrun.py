@@ -30,6 +30,7 @@ from repro.config import INPUT_SHAPES, get_arch
 from repro.configs import ASSIGNED_ARCHS
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_program
+from repro.telemetry import console_handler, get_logger
 
 # long_500k needs sub-quadratic decode; pure full-attention archs skip it
 # (DESIGN.md §Arch-applicability). llama3-8b-swa is the sliding-window
@@ -81,9 +82,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, mode: str = "auto",
     cfg = get_arch(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
-    t0 = time.time()
+    t0 = time.perf_counter()
     prog, compiled = _compile(cfg, shape, mesh, mode)
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     mem = compiled.memory_analysis()
     report = rl.analyze(
         f"{prog.name}@{mesh_kind}", compiled, mesh.size,
@@ -119,17 +120,21 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, mode: str = "auto",
         "roofline": report.as_dict(),
     }
     if verbose:
-        print(f"== {prog.name} @ {mesh_kind} ({mesh.size} chips) ==")
-        print(f"   compile {t_compile:.1f}s")
-        print(f"   memory_analysis: {mem}")
-        print(f"   flops/chip={report.flops_per_chip:.3e} "
-              f"bytes/chip={report.bytes_per_chip:.3e} "
-              f"wire/chip={report.wire_bytes_per_chip:.3e}")
-        print(f"   terms: compute={report.compute_s:.3e}s "
-              f"memory={report.memory_s:.3e}s "
-              f"collective={report.collective_s:.3e}s "
-              f"-> bottleneck={report.bottleneck}")
-        print(f"   collectives: {report.collectives['by_kind']}")
+        # structured events, not prints: this is library code — the CLI
+        # entry points attach the text formatter (repro.telemetry)
+        log = get_logger()
+        log.event("dryrun_program", program=prog.name, mesh=mesh_kind,
+                  chips=mesh.size, compile_s=t_compile)
+        log.event("dryrun_memory", program=prog.name,
+                  memory_analysis=str(mem))
+        log.event("dryrun_roofline", program=prog.name,
+                  flops_per_chip=report.flops_per_chip,
+                  bytes_per_chip=report.bytes_per_chip,
+                  wire_bytes_per_chip=report.wire_bytes_per_chip,
+                  compute_s=report.compute_s, memory_s=report.memory_s,
+                  collective_s=report.collective_s,
+                  bottleneck=report.bottleneck,
+                  collectives=str(report.collectives["by_kind"]))
     del compiled
     gc.collect()
     return rec
@@ -148,6 +153,8 @@ def main():
     args = ap.parse_args()
 
     os.makedirs(args.out_dir, exist_ok=True)
+    # the CLI is where events become text: attach the console formatter
+    get_logger().add_handler(console_handler())
     meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
     if args.all:
         if args.mode.startswith("train"):

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.config import (
     INPUT_SHAPES, ProtocolConfig, ShapeConfig, TrainConfig, get_arch,
 )
+from repro.telemetry import console_handler, get_logger
 from repro.core.distributed import (
     init_dynamic_state, make_dynamic_train_step, make_periodic_train_step,
 )
@@ -90,16 +91,24 @@ def main():
                              shape.seq_len, stream) for i in range(m)]
             return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
 
-    t0 = time.time()
-    for t in range(args.steps):
-        key, sub = jax.random.split(key)
-        state, metrics = jstep(state, next_batch(sub))
-        line = f"step {t+1:4d} loss {float(metrics['loss']):.4f}"
-        if "synced" in metrics:
-            line += f" synced={int(metrics['synced'])}"
-        print(line, flush=True)
-    print(f"{args.steps} steps in {time.time()-t0:.1f}s "
-          f"({args.mode}, {cfg.name})")
+    # progress goes through the telemetry event logger: the loop emits
+    # structured events; THIS entry point attaches the text formatter
+    log = get_logger()
+    handler = log.add_handler(console_handler())
+    t0 = time.perf_counter()
+    try:
+        for t in range(args.steps):
+            key, sub = jax.random.split(key)
+            state, metrics = jstep(state, next_batch(sub))
+            fields = {"step": t + 1, "loss": float(metrics["loss"])}
+            if "synced" in metrics:
+                fields["synced"] = int(metrics["synced"])
+            log.event("train_step", **fields)
+        log.event("train_done", steps=args.steps,
+                  seconds=time.perf_counter() - t0, mode=args.mode,
+                  arch=cfg.name)
+    finally:
+        log.remove_handler(handler)
 
 
 if __name__ == "__main__":

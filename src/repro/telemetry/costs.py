@@ -1,0 +1,119 @@
+"""Static per-stage cost attribution: jaxpr FLOPs × observed fires.
+
+The compiled round is ``lax.cond(gate, sync, skip)`` — XLA folds both
+branches into one module, so a compiled-executable cost analysis cannot
+say what a FIRED round costs vs. a quiet one. The jaxpr still can:
+``round_costs`` traces one round of a ``ProtocolSpec`` abstractly
+(``jax.make_jaxpr`` over ``ShapeDtypeStruct`` templates — no arrays, no
+compilation) and splits ``repro.analysis.roofline.jaxpr_flops`` three
+ways:
+
+* ``gate_flops`` — everything outside the sync cond: the local-update
+  plumbing plus the trigger's divergence test, paid EVERY round;
+* ``skip_flops`` — the cond's false branch (state carry on a quiet
+  round);
+* ``sync_flops`` — the true branch (cohort + aggregate + commit).
+
+``attribute`` then joins these with a recorded run's observed trigger
+fires (``cum_syncs`` from the telemetry stream): estimated total compute
+= rounds·(gate+skip) + fires·(sync−skip). That is the protocol's compute
+side of the paper's trade-off — how much arithmetic the dynamic trigger
+spends to save its bytes — per spec, from the stream alone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.analysis.roofline import jaxpr_flops
+
+__all__ = ["RoundCosts", "round_costs", "attribute"]
+
+
+@dataclass(frozen=True)
+class RoundCosts:
+    """Per-round FLOP estimate of one ``ProtocolSpec``, split by the
+    sync cond's branches."""
+    spec: str
+    gate_flops: float     # paid every round (outside the sync cond)
+    skip_flops: float     # the cond's false (quiet-round) branch
+    sync_flops: float     # the cond's true (fired-round) branch
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"spec": self.spec, "gate_flops": self.gate_flops,
+                "skip_flops": self.skip_flops,
+                "sync_flops": self.sync_flops}
+
+
+def _top_level_conds(jaxpr):
+    return [e for e in jaxpr.eqns if e.primitive.name == "cond"]
+
+
+def round_costs(spec, template=None, m: int = 8) -> RoundCosts:
+    """Trace one abstract round of ``spec`` and split its jaxpr FLOPs by
+    the sync cond. ``template``: a stacked ``ShapeDtypeStruct`` fleet
+    (defaults to the contracts module's mixed template of ``m``
+    learners — pass a real architecture's template for absolute
+    numbers; the gate/skip/sync SHARES are what attribution uses)."""
+    from repro.analysis.contracts import abstract_state, mixed_template
+    from repro.core.sync.spec import resolve_spec
+    spec = resolve_spec(spec)
+    if template is None:
+        template = mixed_template(m)
+    mm = jax.tree.leaves(template)[0].shape[0]
+    state = abstract_state(spec, template)
+    adj = jax.ShapeDtypeStruct((mm, mm), jax.numpy.bool_)
+    round_fn = spec.compile()
+    closed = jax.make_jaxpr(
+        lambda s, st, a: round_fn(s, st, None, adjacency=a))(
+            template, state, adj)
+    jx = closed.jaxpr
+    total = jaxpr_flops(closed)
+    conds = _top_level_conds(jx)
+    if not conds:
+        # unconditional spec (e.g. nosync): everything is gate
+        return RoundCosts(spec.name, gate_flops=total,
+                          skip_flops=0.0, sync_flops=0.0)
+    # the sync gate is the top-level cond with the costliest branch
+    # (an always-taken inner cond would sit inside its branches)
+    def worst(e):
+        return max((jaxpr_flops(b) for b in e.params["branches"]),
+                   default=0.0)
+    gate_cond = max(conds, key=worst)
+    branches = gate_cond.params["branches"]
+    skip = jaxpr_flops(branches[0])
+    sync = jaxpr_flops(branches[-1])
+    # jaxpr_flops counted every cond at its worst branch; carve the sync
+    # cond back out to get the unconditional remainder
+    gate = total - worst(gate_cond)
+    return RoundCosts(spec.name, gate_flops=gate, skip_flops=skip,
+                      sync_flops=sync)
+
+
+def attribute(costs: RoundCosts, rounds: int, fires: int,
+              wall_s: Optional[float] = None) -> Dict[str, Any]:
+    """Join static per-round costs with a run's observed trigger fires:
+    the estimated FLOP total and its gate/skip/sync split."""
+    if rounds < 0 or fires < 0 or fires > rounds:
+        raise ValueError(
+            f"need 0 <= fires <= rounds, got fires={fires} "
+            f"rounds={rounds}")
+    gate = rounds * costs.gate_flops
+    skip = (rounds - fires) * costs.skip_flops
+    sync = fires * costs.sync_flops
+    total = gate + skip + sync
+    out = {
+        "spec": costs.spec, "rounds": rounds, "fires": fires,
+        "fire_rate": fires / rounds if rounds else 0.0,
+        "gate_flops": gate, "skip_flops": skip, "sync_flops": sync,
+        "est_total_flops": total,
+        "sync_share": sync / total if total else 0.0,
+        "per_round": costs.as_dict(),
+    }
+    if wall_s is not None:
+        out["wall_s"] = wall_s
+        if wall_s > 0:
+            out["est_flops_per_s"] = total / wall_s
+    return out

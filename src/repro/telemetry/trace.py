@@ -1,0 +1,118 @@
+"""Host-side tracing & profiling hooks (telemetry layer 2).
+
+Wall-clock here always means ``time.perf_counter`` around a call that
+BLOCKS on its (pytree) result — timing async dispatch instead of
+execution is the classic JAX benchmarking bug (``jax.block_until_ready``
+walks a pytree and ignores non-array leaves, so any result shape works).
+
+``ChunkProfiler`` does the recompile accounting for the scanned engine:
+``jit`` retraces per distinct chunk length, so the first observation of
+a length is trace+compile+execute and every later one is execute-only —
+the profiler keeps both populations per length and counts recompiles.
+
+``profiler_trace``/``step_annotation`` are the optional ``jax.profiler``
+integration: a CLI or benchmark wraps a run in ``profiler_trace(dir)``
+and every chunk the engine executes shows up as a named step in the
+trace viewer (the engine annotates when
+``TelemetryConfig.jax_profiler`` is set; annotations are no-ops unless
+a trace is active).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.telemetry.sink import TelemetryLogger, get_logger
+
+__all__ = ["timed", "span", "profiler_trace", "step_annotation",
+           "ChunkProfiler"]
+
+
+def timed(fn: Callable, *args, **kw):
+    """``(result, seconds)`` of one call, blocking on the result so the
+    wall-clock covers execution, not async dispatch."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+@contextlib.contextmanager
+def span(name: str, logger: Optional[TelemetryLogger] = None, **fields):
+    """Time a host-side region and emit it as a ``span`` event (silent
+    unless the logger has handlers). The body is responsible for blocking
+    on device work it wants included — wrap dispatches in ``timed`` or
+    ``jax.block_until_ready``."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        (logger or get_logger()).event(
+            "span", name=name,
+            seconds=time.perf_counter() - t0, **fields)
+
+
+@contextlib.contextmanager
+def profiler_trace(log_dir: Optional[str]):
+    """``jax.profiler`` trace over the with-body when ``log_dir`` is set;
+    a no-op otherwise — callers thread an optional CLI flag straight
+    through."""
+    if not log_dir:
+        yield
+        return
+    jax.profiler.start_trace(log_dir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+def step_annotation(name: str, step: int):
+    """A ``jax.profiler.StepTraceAnnotation`` context (no-op unless a
+    trace is active)."""
+    return jax.profiler.StepTraceAnnotation(name, step_num=step)
+
+
+class ChunkProfiler:
+    """Compile-vs-execute accounting per chunk length.
+
+    ``begin(n)`` returns True when length ``n`` will trace+compile (first
+    sighting — one recompile); ``observe(n, wall_s)`` files the
+    measurement. ``summary()`` is JSON-ready: per-length counts, the
+    first (compile-inclusive) wall-clock, and the best execute-only
+    wall-clock."""
+
+    def __init__(self):
+        self.recompiles = 0
+        self._stats: Dict[int, Dict[str, Any]] = {}
+
+    def begin(self, n: int) -> bool:
+        first = n not in self._stats
+        if first:
+            self.recompiles += 1
+            self._stats[n] = {"calls": 0, "compile_s": None,
+                              "best_exec_s": None, "total_s": 0.0}
+        return first
+
+    def observe(self, n: int, wall_s: float) -> None:
+        if n not in self._stats:      # begin() not called — count it now
+            self.begin(n)
+        st = self._stats[n]
+        st["calls"] += 1
+        st["total_s"] += wall_s
+        if st["compile_s"] is None:
+            st["compile_s"] = wall_s
+        else:
+            best = st["best_exec_s"]
+            st["best_exec_s"] = (wall_s if best is None
+                                 else min(best, wall_s))
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "recompiles": self.recompiles,
+            "chunk_lengths": {str(n): dict(st)
+                              for n, st in sorted(self._stats.items())},
+        }

@@ -18,7 +18,7 @@ from typing import Callable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import NetworkConfig, TrainConfig
+from repro.config import NetworkConfig, TelemetryConfig, TrainConfig
 from repro.core import operators as ops
 from repro.core.protocol import DecentralizedLearner
 from repro.data.pipeline import LearnerStreams
@@ -96,14 +96,19 @@ def run_protocol_training(
     sample_kw: Optional[dict] = None,
     chunk_size: int = DEFAULT_CHUNK,
     network: Optional[NetworkConfig] = None,
+    telemetry: Optional[TelemetryConfig] = None,
 ) -> tuple:
-    """Returns (learner, trajectory)."""
+    """Returns (learner, trajectory). A ``telemetry`` config attaches
+    the fleet telemetry plane (``repro.telemetry``): one schema'd record
+    per round streamed to JSONL, with no change to the training
+    numerics and no extra device transfers."""
     streams = LearnerStreams(source, m, batch=batch, seed=seed,
                              batch_sizes=batch_sizes, **(sample_kw or {}))
     dl = DecentralizedLearner(
         loss_fn, init_fn, m, protocol, train, seed=seed,
         init_heterogeneity=init_heterogeneity,
-        sample_weights=streams.weights, network=network)
+        sample_weights=streams.weights, network=network,
+        telemetry=telemetry)
     traj = Trajectory()
     chunk = max(1, min(chunk_size, rounds))
     t = 0
