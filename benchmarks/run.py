@@ -36,6 +36,7 @@ from benchmarks import (
     kernel_bench,
     roofline_table,
     scan_driver,
+    shard_bench,
     sync_bench,
 )
 
@@ -53,6 +54,7 @@ ALL = [
     fig_network_regimes,
     fig_hierarchy,
     sync_bench,
+    shard_bench,
     kernel_bench,
     roofline_table,
 ]

@@ -46,7 +46,9 @@ from repro.core.sync import registry, stages
 from repro.core.sync.registry import (
     AGGREGATES, COHORTS, COMMITS, PROTOCOLS, TRIGGERS, StageCtx, SyncState,
 )
-from repro.core.sync.spec import GLOBAL_PARAMS, LAYOUTS, ProtocolSpec
+from repro.core.sync.spec import (
+    GLOBAL_PARAMS, LAYOUTS, PLANE_LAYOUTS, ProtocolSpec,
+)
 
 __all__ = [
     "DEFAULT_M", "mixed_template", "abstract_state", "check_registry",
@@ -143,7 +145,7 @@ def _trace_slots(spec: ProtocolSpec, template, *, weighted: bool,
     layout)."""
     trig, coh, agg, com = spec.stage_records()
     p = spec.resolved_params()
-    flat_layout = p["layout"] == "flat"
+    flat_layout = p["layout"] in PLANE_LAYOUTS
     m = _num_learners(template)
     state = abstract_state(spec, template)
     w = _sds((m,), jnp.float32) if weighted else None
@@ -218,7 +220,7 @@ def check_spec(spec: ProtocolSpec, template=None, *, weighted: bool = False,
     except Exception as e:  # noqa: BLE001 — any trace failure is a finding
         return [Finding("contracts", "trace-error", label, _fmt(e))]
 
-    flat_layout = spec.param("layout") == "flat"
+    flat_layout = spec.param("layout") in PLANE_LAYOUTS
     plane_sig = _sig(tr.get("plane"))
     ref_plane_sig = _sig(tr.get("ref_plane"))
     ref_sig = _sig_tree(jax.tree.map(lambda s: _sds(s.shape[1:], s.dtype),

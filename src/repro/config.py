@@ -279,7 +279,14 @@ class ProtocolConfig:
     equal to float-reassociation tolerance, identical sync decisions
     (hence bitwise comm counters) unless a distance lands within
     reassociation error of the Delta threshold, and the balancing
-    augmentation drops from O(m^2 P) to O(m P).
+    augmentation drops from O(m^2 P) to O(m P); ``"sharded"`` is the
+    flat plane with the learner axis split over a device mesh
+    (``repro.core.shard``) — same arithmetic as flat, the engine places
+    the scan carry so per-learner updates, distances, and commits run
+    per-shard and only trigger votes + cohort means cross devices.
+    ``shard_devices`` caps how many visible devices the fleet mesh uses
+    (0 = all); ``m % n_devices`` must be 0 — every device owns the same
+    number of learner rows.
     """
     kind: str = PROTO_DYNAMIC
     b: int = 10
@@ -288,7 +295,8 @@ class ProtocolConfig:
     augmentation: str = "max_distance"   # max_distance | random | all
     weighted: bool = False               # Algorithm 2 (unbalanced B^i)
     bytes_per_param: int = 4
-    layout: str = "tree"                 # tree | flat (fleet-plane)
+    layout: str = "tree"                 # tree | flat | sharded
+    shard_devices: int = 0               # sharded: device cap, 0 = all
     tiers: Optional[HierarchyConfig] = None   # two-tier hierarchy on top
 
     def __post_init__(self):

@@ -1,28 +1,39 @@
-"""SPMD dynamic averaging: the paper's protocol on a TPU mesh.
+"""SPMD dynamic averaging on a pod mesh — a thin shim over the staged
+sync engine.
 
 Hardware adaptation (DESIGN.md §2): each *learner* is a model-parallel
 group of chips (typically: a pod). Learner-distinct parameters carry a
 leading ``m`` axis sharded over the learner mesh axis ("pod"); within a
 learner, weights shard over ("data", "model") exactly like the baseline.
 
-The jitted ``train_step`` then contains:
-  * per-learner forward/backward + optimizer update — NO collective over
-    the learner axis (vmap over the m axis; XLA keeps it pod-local),
-  * every ``b`` steps, the local condition ||theta_i - r||^2 > Delta — one
-    scalar reduce per learner + an m-wide any() (tiny collective),
-  * a ``lax.cond``-gated full averaging (mean over the m axis -> all-reduce
-    over the learner axis) that only *executes* on violation. Both branches
-    lower, so the dry-run HLO exhibits the worst-case collective — exactly
-    the paper's worst-case bound (sigma_Delta <= sigma_b communication).
+This module used to be an independent protocol implementation (plain
+dynamic averaging only). It is now sugar over the same ``ProtocolSpec``
+compile that powers the simulator and the ``layout="sharded"`` fleet
+plane (``repro.core.shard``): the step below vmaps the local update
+(with ``spmd_axis_name`` so within-learner sharding constraints
+propagate) and delegates the sync decision to the compiled staged round
+— divergence trigger, full-fleet cohort (``augmentation="all"``, the
+``B = [m]`` branch of Algorithm 1, the right degeneration for pod-scale
+m), mean aggregate, balancing commit. The spec keeps ``layout="tree"``:
+per-leaf expressions preserve the within-learner ("data", "model")
+placement that the ``(m, P)`` plane concatenation would destroy; fleets
+of single-device learners that want the plane use
+``DecentralizedLearner`` with ``layout="flat"``/``"sharded"`` instead.
 
-Partial balancing (Algorithm 1's incremental augmentation) degenerates for
-pod-scale m (2-32) and lives in the simulator; the SPMD path implements the
-``B = [m]`` branch (augmentation="all"), which still satisfies Def. 2.
+The jitted ``train_step`` still lowers to exactly the paper's shape:
+  * per-learner update — no collective over the learner axis,
+  * every ``b`` steps, one scalar reduce per learner + an m-wide any(),
+  * a ``lax.cond``-gated full averaging (mean over m -> all-reduce over
+    the learner axis) that only *executes* on violation. Both branches
+    lower, so dry-run HLO exhibits the worst-case collective — the
+    paper's sigma_Delta <= sigma_b communication bound.
 
 Communication accounting: ``syncs`` counts executed averaging rounds;
-protocol bytes = syncs * 2 * (m) * model_bytes (paper semantics) while the
+protocol bytes = syncs * 2 * m * model_bytes (paper semantics) while the
 collective bytes of one sync on a ring are 2*(m-1)/m * model_bytes per
-learner — both reported by the roofline tooling.
+learner — both reported by the roofline tooling. Metrics use the
+engine-wide key ``"synced"`` (this-round 0/1) everywhere; the retired
+manual-collective path's cumulative ``"syncs"`` key is gone.
 """
 from __future__ import annotations
 
@@ -31,7 +42,10 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, ProtocolConfig, TrainConfig
+from repro.config import ProtocolConfig, TrainConfig
+from repro.core.divergence import per_learner_sq_distance
+from repro.core.sync.registry import SyncState
+from repro.core.sync.spec import resolve_spec
 from repro.optim import make_optimizer
 
 
@@ -55,11 +69,35 @@ def init_dynamic_state(init_fn: Callable, key, m: int,
     return DynamicTrainState(stacked, opt_state, base, z, z, z)
 
 
-def _tree_sq_dist_per_learner(stacked, ref):
-    def leaf(x, r):
-        d = x.astype(jnp.float32) - r.astype(jnp.float32)[None]
-        return jnp.sum(d.reshape(d.shape[0], -1) ** 2, axis=1)
-    return sum(jax.tree.leaves(jax.tree.map(leaf, stacked, ref)))
+def _spmd_spec(proto: ProtocolConfig):
+    """The staged spec this shim delegates to: the config's preset with
+    the full-fleet cohort forced (``B = [m]``, where the cohort consumes
+    an augmentation strategy) on the tree layout."""
+    spec = resolve_spec(proto).with_params(layout="tree")
+    if "augmentation" in spec.known_params:
+        spec = spec.with_params(augmentation="all")
+    return spec
+
+
+def _vmapped_update(loss_fn, train, spmd_axis_name):
+    opt = make_optimizer(train)
+
+    def local_update(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return jax.vmap(local_update, spmd_axis_name=spmd_axis_name)
+
+
+def _sync_input(spec, state: DynamicTrainState, m: int) -> SyncState:
+    """The staged round's carry, synthesized per step from the pod-path
+    state. With ``augmentation="all"`` every fired sync is FULL, so the
+    balancing count v is 0 in and 0 out (full sync resets it) and the
+    cohort draws no randomness — constants are self-consistent."""
+    return SyncState(ref=state.ref, v=jnp.zeros((), jnp.int32),
+                     rng=jax.random.PRNGKey(0), step=state.step,
+                     extra=spec.init_extra(m))
 
 
 def make_dynamic_train_step(
@@ -83,53 +121,31 @@ def make_dynamic_train_step(
     all intermediate shardings from the inputs alone (§Perf records the
     difference).
     """
-    opt = make_optimizer(train)
-
-    def local_update(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        params, opt_state = opt.update(params, grads, opt_state)
-        return params, opt_state, loss
-
-    vmapped = jax.vmap(local_update, spmd_axis_name=spmd_axis_name)
+    spec = _spmd_spec(proto)
+    round_fn = spec.compile()
+    vmapped = _vmapped_update(loss_fn, train, spmd_axis_name)
 
     def step(state: DynamicTrainState, batch):
         params, opt_state, losses = vmapped(
             state.params, state.opt_state, batch)
         t = state.step + 1
-
-        def check(operand):
-            params, ref = operand
-            dists = _tree_sq_dist_per_learner(params, ref)      # (m,)
-            violated = jnp.any(dists > proto.delta)
-
-            def sync(_):
-                mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), params)
-                newp = jax.tree.map(
-                    lambda mn: jnp.broadcast_to(mn[None], (m,) + mn.shape),
-                    mean)
-                return newp, mean, jnp.int32(1)
-
-            def keep(_):
-                return params, ref, jnp.int32(0)
-
-            newp, newref, did = jax.lax.cond(violated, sync, keep, None)
-            return newp, newref, did, jnp.int32(1), jnp.max(dists)
-
-        def skip(operand):
-            params, ref = operand
-            return params, ref, jnp.int32(0), jnp.int32(0), jnp.zeros(())
-
+        res = round_fn(params, _sync_input(spec, state, m))
         do_check = (t % proto.b) == 0
-        params, ref, did_sync, did_check, maxdist = jax.lax.cond(
-            do_check, check, skip, (params, state.ref))
-
+        # the trigger already priced the distances into its decision; the
+        # diagnostic max recomputes them against the pre-sync reference
+        # (reported on check rounds only, like the pre-shim step)
+        maxdist = jax.lax.cond(
+            do_check,
+            lambda: jnp.max(per_learner_sq_distance(params, state.ref)),
+            lambda: jnp.zeros(()))
         new_state = DynamicTrainState(
-            params, opt_state, ref, t,
-            state.syncs + did_sync, state.checks + did_check)
+            res.params, opt_state, res.state.ref, t,
+            state.syncs + res.rec.syncs,
+            state.checks + do_check.astype(jnp.int32))
         metrics = {
             "loss": jnp.mean(losses),
             "loss_per_learner": losses,
-            "synced": did_sync,
+            "synced": res.rec.syncs,
             "max_sq_dist": maxdist,
         }
         return new_state, metrics
@@ -140,32 +156,25 @@ def make_dynamic_train_step(
 def make_periodic_train_step(loss_fn, proto: ProtocolConfig,
                              train: TrainConfig, m: int,
                              spmd_axis_name: Optional[str] = None):
-    """sigma_b baseline in the same m-learner layout (for A/B comparison)."""
-    opt = make_optimizer(train)
+    """sigma_b baseline in the same m-learner layout (for A/B comparison).
 
-    def local_update(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        params, opt_state = opt.update(params, grads, opt_state)
-        return params, opt_state, loss
-
-    vmapped = jax.vmap(local_update, spmd_axis_name=spmd_axis_name)
+    Delegates to the ``periodic`` preset of the same staged compile. The
+    pod-path state keeps its frozen reference model (periodic makes no
+    decision from it), matching the pre-shim step exactly."""
+    spec = _spmd_spec(
+        ProtocolConfig(kind="periodic", b=proto.b,
+                       bytes_per_param=proto.bytes_per_param))
+    round_fn = spec.compile()
+    vmapped = _vmapped_update(loss_fn, train, spmd_axis_name)
 
     def step(state: DynamicTrainState, batch):
         params, opt_state, losses = vmapped(
             state.params, state.opt_state, batch)
-        t = state.step + 1
-
-        def sync(params):
-            mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), params)
-            return jax.tree.map(
-                lambda mn: jnp.broadcast_to(mn[None], (m,) + mn.shape), mean), jnp.int32(1)
-
-        def keep(params):
-            return params, jnp.int32(0)
-
-        params, did = jax.lax.cond((t % proto.b) == 0, sync, keep, params)
+        res = round_fn(params, _sync_input(spec, state, m))
         new_state = DynamicTrainState(
-            params, opt_state, state.ref, t, state.syncs + did, state.checks)
-        return new_state, {"loss": jnp.mean(losses), "synced": did}
+            res.params, opt_state, state.ref, state.step + 1,
+            state.syncs + res.rec.syncs, state.checks)
+        return new_state, {"loss": jnp.mean(losses),
+                           "synced": res.rec.syncs}
 
     return step

@@ -51,6 +51,7 @@ from repro.config import (
     NetworkConfig, ProtocolConfig, TelemetryConfig, TrainConfig,
 )
 from repro.core import operators as ops
+from repro.core import shard
 from repro.core.divergence import divergence, flat_size
 from repro.core.sync.hierarchy import (
     apply_hierarchical, init_hier_state, validate_hierarchy,
@@ -180,6 +181,33 @@ class DecentralizedLearner:
         elif self.spec.uses_overlay:
             self._static_adj = net_topology.star(m)
 
+        # device-sharded fleet plane (layout="sharded"): build the fleet
+        # mesh and give the scan carry its NamedSharding home — learner-
+        # stacked leaves (params, opt state, staleness ages) split over
+        # the "fleet" axis, the reference model and scalar counters
+        # replicated. The jitted round then traces against committed
+        # sharded inputs (plus the constrain_rows pins the compiled round
+        # inserts under the active fleet below), so per-learner updates,
+        # sqdist rows, and (m, P) commits execute per-shard and only
+        # trigger votes + cohort means cross devices.
+        self.fleet = None
+        if self.spec.param("layout") == "sharded":
+            self.fleet = shard.fleet_sharding(
+                m, self.spec.param("shard_devices"))
+            self.params = shard.put_fleet(self.fleet, self.params)
+            self.opt_state = shard.put_fleet(self.fleet, self.opt_state)
+            if self.tiers is None:
+                self.sync_state = shard.put_sync_state(
+                    self.fleet, self.sync_state)
+            else:
+                # per-cluster hierarchy state carries (g, ...) leaves —
+                # cluster-indexed, not learner-indexed — so it replicates;
+                # the per-cluster sync runs flat arithmetic under vmap
+                # (constrain_rows no-ops on the (k, P) cluster planes)
+                # while the fleet carry around it stays device-sharded
+                self.sync_state = shard.put_replicated(
+                    self.fleet, self.sync_state)
+
         # cumulative counters (host-side python ints / floats / numpy)
         self.cumulative_loss = 0.0
         self.cumulative_loss_per_learner = np.zeros((m,), np.float32)
@@ -201,8 +229,11 @@ class DecentralizedLearner:
                 np.full((self.tiers.num_clusters,), self.inter_model_bytes,
                         np.int64)])
 
-        self._step = jax.jit(self._make_step())
-        self._chunk = jax.jit(self._make_chunk())
+        # under a fleet the jitted callables run (and hence TRACE) inside
+        # the active-fleet context, so the compiled round's constrain_rows
+        # pins resolve to this engine's mesh
+        self._step = self._with_fleet(jax.jit(self._make_step()))
+        self._chunk = self._with_fleet(jax.jit(self._make_chunk()))
         self._fold_step = jax.jit(self._make_fold(chunked=False))
         self._fold_chunk = jax.jit(self._make_fold(chunked=True))
 
@@ -231,12 +262,29 @@ class DecentralizedLearner:
                 self._make_fold(chunked=True, telemetry=True))
 
     # ------------------------------------------------------------------
+    def _with_fleet(self, fn):
+        """Run ``fn`` under this engine's active-fleet context (identity
+        without one). The compiled round reads the fleet at trace time —
+        and tracing happens inside the jitted call — so the wrapper must
+        surround every dispatch, not just the first."""
+        if self.fleet is None:
+            return fn
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with shard.use_fleet(self.fleet):
+                return fn(*args, **kwargs)
+
+        return wrapped
+
+    # ------------------------------------------------------------------
     def _make_step(self):
         loss_fn, opt = self.loss_fn, self.opt
         proto, weights = self.protocol, self.sample_weights
         spec = self.spec
         tiers = self.tiers
         track_div = self.track_divergence
+        fleet = self.fleet
         m, net = self.m, self.network
         model_bytes = self.model_bytes
         inter_model_bytes = self.inter_model_bytes
@@ -306,6 +354,13 @@ class DecentralizedLearner:
                             agg_bw, agg_lat))
                 else:
                     net_time = jnp.float32(0.0)
+            if fleet is not None:
+                # pin the committed carry back to its input placement so
+                # chunk-to-chunk carry sharding is a fixpoint (no reshard
+                # between calls); leaves without a leading learner axis
+                # (e.g. scalar optimizer counts) pass through untouched
+                params = shard.constrain_fleet(fleet, params)
+                opt_state = shard.constrain_fleet(fleet, opt_state)
             div = divergence(params) if track_div else jnp.zeros(())
             num_active = (jnp.sum(active).astype(jnp.int32)
                           if active is not None else jnp.int32(m))
@@ -420,6 +475,10 @@ class DecentralizedLearner:
     # ------------------------------------------------------------------
     def step(self, batches) -> ProtocolMetrics:
         """One round. ``batches``: pytree with leading (m, B, ...) leaves."""
+        if self.fleet is not None:
+            # each device receives only its own learners' samples — the
+            # batch never materializes whole on any single device
+            batches = shard.put_fleet(self.fleet, batches, axis=0)
         if self.recorder is not None:
             return self._run_observed(self._step, self._fold_step_t,
                                       batches, 1)
@@ -445,6 +504,8 @@ class DecentralizedLearner:
         chunk size (plus at most one remainder) as ``train.loop`` does.
         """
         n = int(jax.tree.leaves(batches)[0].shape[0])
+        if self.fleet is not None:   # (n, m, B, ...): the learner axis is 1
+            batches = shard.put_fleet(self.fleet, batches, axis=1)
         if self.recorder is not None:
             return self._run_observed(self._chunk, self._fold_chunk_t,
                                       batches, n)

@@ -34,7 +34,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 
-from repro.core import flatten
+from repro.core import flatten, shard
 from repro.core.sync import registry, stages
 from repro.core.sync.registry import (
     CommRecord, StageCtx, StageResult, SyncOut, get_protocol,
@@ -42,25 +42,34 @@ from repro.core.sync.registry import (
 
 # parameters every spec understands regardless of its stages. ``layout``
 # picks the fleet arithmetic: "tree" (per-leaf pytree expressions,
-# bitwise vs the goldens) or "flat" (the one-(m, P)-matrix fleet plane,
+# bitwise vs the goldens), "flat" (the one-(m, P)-matrix fleet plane,
 # repro.core.flatten — params to float reassociation tolerance, and the
 # same sync decisions hence bitwise comm counters, except in the
 # measure-zero case where a distance lands within reassociation error
 # of the Delta threshold and the differently-associated sums disagree
-# about the comparison)
+# about the comparison), or "sharded" (the same flat plane with its m
+# axis split over a device mesh, repro.core.shard — identical arithmetic
+# to "flat"; ``shard_devices`` caps how many visible devices the fleet
+# mesh uses, 0 = all of them, and m % n_devices must be 0)
 GLOBAL_PARAMS: Dict[str, Any] = {"weighted": False, "bytes_per_param": 4,
-                                 "layout": "tree"}
+                                 "layout": "tree", "shard_devices": 0}
 
-# the registered fleet layouts. A new backend (e.g. a device-sharded
-# plane) joins by adding its name here and branching in the stages — the
-# static contract checker (repro.analysis.contracts) then holds every
-# registered preset to abstract tree-equivalence automatically.
-LAYOUTS = ("tree", "flat")
+# the registered fleet layouts. A new backend joins by adding its name
+# here and branching in the stages — the static contract checker
+# (repro.analysis.contracts) then holds every registered preset to
+# abstract tree-equivalence automatically.
+LAYOUTS = ("tree", "flat", "sharded")
+
+# layouts that run the dense (m, P) fleet-plane arithmetic. "sharded" is
+# "flat" plus sharding constraints that are identity off-mesh, so both
+# the compile below and the contract checker treat them as one family.
+PLANE_LAYOUTS = ("flat", "sharded")
 
 # the ProtocolConfig fields that overlay onto a preset's params (only the
 # ones the preset's stages actually consume are applied)
 _CONFIG_PARAM_FIELDS = ("b", "delta", "fedavg_c", "augmentation",
-                        "weighted", "bytes_per_param", "layout")
+                        "weighted", "bytes_per_param", "layout",
+                        "shard_devices")
 
 
 def _canonical(v):
@@ -202,6 +211,12 @@ class ProtocolSpec:
             raise ValueError(
                 f"layout must be one of {LAYOUTS}, got "
                 f"{resolved['layout']!r}")
+        if not (isinstance(resolved["shard_devices"], int)
+                and not isinstance(resolved["shard_devices"], bool)
+                and resolved["shard_devices"] >= 0):
+            raise ValueError(
+                f"shard_devices must be an int >= 0 (0 = all visible "
+                f"devices), got {resolved['shard_devices']!r}")
         for rec in (trig, coh, agg, com):
             if rec.validate is not None:
                 rec.validate(resolved)
@@ -268,17 +283,23 @@ def _compiled_round(spec: ProtocolSpec):
                     cohort -> aggregate -> commit
           false: identity + zero accounting (extra state still ages)
 
-    Under ``layout="flat"`` the gated branch additionally ravels the
-    configuration onto the flat fleet-plane (``repro.core.flatten``) —
-    the stages then run their dense (m, P) forms and the committed plane
-    is unraveled back to the pytree before the branches join, so the
-    scan carry (and everything outside the sync machinery) keeps the
-    pytree layout either way. A round whose gate does not fire never
-    pays for the ravel.
+    Under the plane layouts ("flat"/"sharded") the gated branch
+    additionally ravels the configuration onto the flat fleet-plane
+    (``repro.core.flatten``) — the stages then run their dense (m, P)
+    forms and the committed plane is unraveled back to the pytree before
+    the branches join, so the scan carry (and everything outside the
+    sync machinery) keeps the pytree layout either way. A round whose
+    gate does not fire never pays for the ravel. ``layout="sharded"``
+    runs the identical plane arithmetic and only adds
+    ``shard.constrain_rows`` pins on the raveled and committed planes:
+    at trace time they read the fleet mesh the ENGINE activated
+    (``shard.use_fleet``) and split the m axis over its devices; with no
+    active fleet (eval_shape in the contract gate, the jaxpr audit) they
+    are the identity, so "sharded" stays abstractly equal to "flat".
     """
     trig, coh, agg, com = spec.stage_records()
     p = spec.resolved_params()
-    flat_layout = p["layout"] == "flat"
+    flat_layout = p["layout"] in PLANE_LAYOUTS
 
     def round_fn(stacked, state, weights=None, active=None, adjacency=None):
         m = stages.num_learners(stacked)
@@ -299,15 +320,16 @@ def _compiled_round(spec: ProtocolSpec):
             out = com.fn(sctx, cout, agg.fn(sctx, cout), hot, nhot)
             out = out._replace(extra=trig.commit_extra(sctx, cout.mask))
             if adapter is not None:
-                out = out._replace(params=adapter.unravel(out.params),
-                                   ref=adapter.unravel_model(out.ref))
+                out = out._replace(
+                    params=adapter.unravel(shard.constrain_rows(out.params)),
+                    ref=adapter.unravel_model(out.ref))
             return out
 
         def sync(rng):
             sctx = ctx
             if adapter is not None:
                 sctx = ctx._replace(
-                    flat=adapter.ravel(stacked),
+                    flat=shard.constrain_rows(adapter.ravel(stacked)),
                     ref_flat=adapter.ravel_model(state.ref))
             if trig.condition is None:
                 return pipeline(sctx, reach, None, rng)

@@ -114,6 +114,65 @@ def test_spmd_axis_name_dynamic_step_numerics():
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]))
 
 
+def test_distributed_shim_delegates_to_staged_engine():
+    """core.distributed is a shim over the staged ProtocolSpec compile:
+    syncs fire exactly on divergence violations, the synced fleet
+    collapses onto one model, and the counters stay consistent."""
+    from repro.config import ProtocolConfig, TrainConfig
+    from repro.core.distributed import (
+        init_dynamic_state, make_dynamic_train_step,
+        make_periodic_train_step)
+    from repro.data.synthetic import SyntheticMNIST
+    from repro.models.cnn import cnn_loss, init_cnn_params
+    cfg = get_arch("mnist_cnn", smoke=True)
+    loss_fn = lambda p, b: cnn_loss(cfg, p, b)
+    train = TrainConfig(optimizer="sgd", learning_rate=0.3)
+    m = 3
+    src = SyntheticMNIST(seed=0, image_size=14)
+
+    def batches(t):
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[src.sample(jax.random.PRNGKey(100 * t + i), 8)
+              for i in range(m)])
+
+    def drive(step_fn):
+        state = init_dynamic_state(
+            lambda k: init_cnn_params(cfg, k), jax.random.PRNGKey(0), m,
+            train)
+        jstep = jax.jit(step_fn)
+        synced = []
+        for t in range(4):
+            state, metrics = jstep(state, batches(t))
+            synced.append(int(metrics["synced"]))
+        return state, synced
+
+    # a tiny Delta: the first check (t=2) must violate and average
+    proto = ProtocolConfig(kind="dynamic", b=2, delta=1e-6)
+    state, synced = drive(make_dynamic_train_step(loss_fn, proto, train, m))
+    assert synced == [0, 1, 0, 1]
+    assert int(state.syncs) == 2 and int(state.checks) == 2
+    # after a sync round every learner carries the same model, and the
+    # reference moved to it
+    for leaf, ref in zip(jax.tree.leaves(state.params),
+                         jax.tree.leaves(state.ref)):
+        assert np.allclose(np.asarray(leaf), np.asarray(leaf)[0][None])
+        np.testing.assert_array_equal(np.asarray(leaf)[0], np.asarray(ref))
+
+    # a huge Delta: checks run, syncs never fire, the fleet stays diverged
+    proto = ProtocolConfig(kind="dynamic", b=2, delta=1e9)
+    state, synced = drive(make_dynamic_train_step(loss_fn, proto, train, m))
+    assert synced == [0, 0, 0, 0]
+    assert int(state.syncs) == 0 and int(state.checks) == 2
+
+    # the periodic baseline averages unconditionally every b rounds and
+    # uses the same "synced" metrics key
+    proto = ProtocolConfig(kind="periodic", b=2)
+    state, synced = drive(make_periodic_train_step(loss_fn, proto, train, m))
+    assert synced == [0, 1, 0, 1]
+    assert int(state.syncs) == 2
+
+
 def test_microbatch_accumulation_matches_full_batch():
     """micro_batch gradient accumulation == one full-batch step exactly."""
     from repro.config import TrainConfig
