@@ -22,6 +22,7 @@ import sys
 import time
 
 from benchmarks import (
+    async_bench,
     dynamic_amortized,
     fig5_1_dynamic_vs_periodic,
     fig5_2_fedavg,
@@ -55,6 +56,7 @@ ALL = [
     fig_hierarchy,
     sync_bench,
     shard_bench,
+    async_bench,
     kernel_bench,
     roofline_table,
 ]

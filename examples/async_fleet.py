@@ -1,0 +1,117 @@
+"""An asynchronous fleet: event-driven averaging over slow links.
+
+The paper's fleets synchronize in lock-step rounds. Real radio links
+don't cooperate: at a 100 kB model and a 1-second round budget, an LTE
+link's round trip fits inside the round, but an edge (2G-fallback) link
+needs two full seconds — its exchanges are still IN FLIGHT when the next
+round starts. Attaching an ``AsyncConfig`` rewrites any protocol onto
+the event-driven network timeline (``repro.core.sync.async_sync``):
+
+* every learner runs on a LOCAL clock that only advances while it is
+  idle — a slow learner's cadence stretches by its flight times;
+* a triggered exchange flies ``k = ceil(round_trip/budget) - 1`` whole
+  rounds through a bounded arrival ring, and the learner participates
+  in a synchronization only when its message lands;
+* the whole timeline is pure in ``(seed, t)`` and runs INSIDE the
+  scanned engine — one compiled program per chunk, no Python events.
+
+The walkthrough runs the lte/edge fleet under the cadence trigger and
+the divergence trigger, streams both runs through the telemetry plane,
+and rebuilds the observatory run cards — including the in-flight /
+staleness-age histograms — from the JSONL alone. Progress goes through
+the structured event logger (``repro.telemetry``), the same stream a
+launcher would scrape.
+
+    PYTHONPATH=src python examples/async_fleet.py [--smoke]
+"""
+import argparse
+import json
+import os
+import tempfile
+
+from repro.config import (
+    AsyncConfig, NetworkConfig, ProtocolConfig, TelemetryConfig,
+    TrainConfig, get_arch,
+)
+from repro.data.synthetic import GraphicalModelStream
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.telemetry import console_handler, get_logger
+from repro.telemetry.observatory import load_run, summarize
+from repro.train.loop import run_protocol_training
+
+FLEET = NetworkConfig(link_classes=("lte", "edge"), act_prob=0.85)
+TIMELINE = AsyncConfig(round_budget=1.0, payload_bytes=100_000)
+
+
+def run_one(name, proto, rounds, jsonl, log):
+    cfg = get_arch("drift_mlp", smoke=True)
+    dl, _ = run_protocol_training(
+        lambda p, b: cnn_loss(cfg, p, b),
+        lambda k: init_cnn_params(cfg, k),
+        GraphicalModelStream(seed=0, drift_prob=0.0),
+        m=8, rounds=rounds, protocol=proto,
+        train=TrainConfig(optimizer="sgd", learning_rate=0.05),
+        batch=10, seed=0, network=FLEET, async_net=TIMELINE,
+        telemetry=TelemetryConfig(path=jsonl, per_link=True))
+    dl.recorder.close()
+    log.event("fleet_run_done", protocol=name, rounds=rounds,
+              syncs=dl.comm_totals["syncs"], bytes=dl.comm_bytes(),
+              net_time_s=round(dl.network_time, 2))
+    return dl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few rounds (CI smoke)")
+    args = ap.parse_args()
+    rounds = 32 if args.smoke else 160
+
+    log = get_logger()
+    handler = log.add_handler(console_handler())
+    out_dir = tempfile.mkdtemp(prefix="async_fleet_")
+
+    print(f"fleet: m=8, links={FLEET.link_classes}, "
+          f"act_prob={FLEET.act_prob}, round budget "
+          f"{TIMELINE.round_budget}s at a {TIMELINE.payload_bytes/1e3:.0f}"
+          f"kB payload -> edge exchanges fly 1 round, lte lands "
+          f"synchronously\n")
+
+    try:
+        for name, proto in [
+            ("periodic b=2", ProtocolConfig(kind="periodic", b=2)),
+            ("dynamic Δ=0.5", ProtocolConfig(kind="dynamic", b=2,
+                                             delta=0.5)),
+        ]:
+            jsonl = os.path.join(
+                out_dir, name.split()[0] + ".jsonl")
+            dl = run_one(name, proto, rounds, jsonl, log)
+
+            # the observatory's view, from the stream alone: the run
+            # card now carries the timeline — per-round in-flight
+            # counts and the chunk-end age/clock histograms
+            card = summarize(load_run(jsonl))
+            ages = card.get("state_ages", {})
+            print(f"{name:14s} loss={card['cum_loss']:9.1f} "
+                  f"syncs={card['cum_syncs']:3d} "
+                  f"comm={card['cum_bytes']/1e6:6.1f}MB "
+                  f"net_time={card['net_time_s']:7.2f}s")
+            print(f"{'':14s} in-flight last={card.get('inflight_last', 0)} "
+                  f"oldest age={card.get('max_age_last', 0)} "
+                  f"age histogram="
+                  f"{json.dumps(ages.get('age', {}).get('hist', {}))} "
+                  f"in-flight histogram="
+                  f"{json.dumps(ages.get('inflight', {}).get('hist', {}))}")
+    finally:
+        log.remove_handler(handler)
+
+    print("\nthe cadence trigger keeps paying for every tick — the edge "
+          "learners just pay it a round late; the divergence trigger "
+          "only launches when a model actually drifts, so the slow links "
+          "stay quiet until the violation lands. Same engine, same scan: "
+          "the timeline is just trigger state.")
+    print("async_fleet_done")
+
+
+if __name__ == "__main__":
+    main()

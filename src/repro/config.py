@@ -500,6 +500,53 @@ class NetworkConfig:
 
 
 # ---------------------------------------------------------------------------
+# Asynchronous timeline
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """The event-driven network timeline (``repro.network.events`` +
+    ``repro.core.sync.async_sync``), threaded through the engine like
+    ``NetworkConfig``.
+
+    Attaching one to a ``DecentralizedLearner`` (directly or via
+    ``run_protocol_training(async_net=...)``) rewrites the protocol's
+    trigger onto per-learner local clocks with messages in flight: each
+    sync exchange flies ``k = ceil(round_trip / round_budget) - 1``
+    whole rounds, with the round trip priced from the ``NetworkConfig``
+    link classes and the payload size (``payload_bytes``; None = the
+    model's own byte size). ``round_budget`` is the simulated seconds
+    one scanned round represents — a budget covering the slowest link's
+    round trip reproduces the synchronous engine bitwise.
+
+    ``aircomp`` additionally swaps the coordinator's mean/average pair
+    for the over-the-air analog-superposition stages: the cohort mean
+    arrives through one shared-medium transmission with Gaussian
+    receiver noise ``snr_db`` below the aggregate's RMS (draw pure in
+    ``(air_seed, t)``).
+    """
+    round_budget: float = 1.0     # simulated seconds per scanned round
+    max_delay: int = 8            # arrival-ring depth (max flight rounds + 1)
+    payload_bytes: Optional[int] = None   # None = the engine's model_bytes
+    aircomp: bool = False         # swap mean/average -> over-the-air stages
+    snr_db: float = 20.0          # receiver SNR below the aggregate's RMS
+    air_seed: int = 0             # noise stream seed (pure in (seed, t))
+
+    def __post_init__(self):
+        if not self.round_budget > 0:
+            raise ValueError(
+                f"round_budget must be > 0 simulated seconds, "
+                f"got {self.round_budget!r}")
+        if self.max_delay < 1:
+            raise ValueError(
+                f"max_delay must be >= 1 round, got {self.max_delay!r}")
+        if self.payload_bytes is not None and self.payload_bytes < 0:
+            raise ValueError(
+                f"payload_bytes must be >= 0 (or None for the model's "
+                f"size), got {self.payload_bytes!r}")
+
+
+# ---------------------------------------------------------------------------
 # Telemetry
 # ---------------------------------------------------------------------------
 

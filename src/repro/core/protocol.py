@@ -48,11 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import (
-    NetworkConfig, ProtocolConfig, TelemetryConfig, TrainConfig,
+    AsyncConfig, NetworkConfig, ProtocolConfig, TelemetryConfig, TrainConfig,
 )
 from repro.core import operators as ops
 from repro.core import shard
 from repro.core.divergence import divergence, flat_size
+from repro.core.sync.async_sync import asyncify
 from repro.core.sync.hierarchy import (
     apply_hierarchical, init_hier_state, validate_hierarchy,
 )
@@ -76,6 +77,12 @@ class ProtocolMetrics(NamedTuple):
     #   hierarchy. Counts stay small int32 on device; the HOST prices them
     #   into int64 bytes (per-link payload size × transfers + msg_bytes ×
     #   messages), so billion-parameter payloads never overflow
+    num_inflight: jnp.ndarray        # scalar int32 — learners whose sync
+    #   exchange is in flight after this round (0 without an async
+    #   timeline)
+    max_age: jnp.ndarray             # scalar int32 — the oldest
+    #   rounds-since-sync counter the trigger carries (staleness/async
+    #   age; 0 for stateless triggers)
 
 
 class DecentralizedLearner:
@@ -99,6 +106,7 @@ class DecentralizedLearner:
         track_divergence: bool = False,
         network: Optional[NetworkConfig] = None,
         telemetry: Optional[TelemetryConfig] = None,
+        async_net: Optional[AsyncConfig] = None,
     ):
         self.m = m
         self.protocol = protocol
@@ -141,6 +149,17 @@ class DecentralizedLearner:
         self.sample_weights = sample_weights
         self.model_size = flat_size(base)
         self.model_bytes = self.model_size * self.spec.bytes_per_param
+
+        # event-driven async timeline (AsyncConfig): rewrite the protocol
+        # onto per-learner local clocks with messages in flight BEFORE any
+        # state init — the rewritten spec carries the timeline's ring
+        # buffers / clocks in SyncState.extra and (with aircomp) the
+        # over-the-air stages. Under a hierarchy the intra tier runs the
+        # rewritten spec; tiers.inter stays synchronous.
+        self.async_net = async_net
+        if async_net is not None:
+            self.spec = asyncify(self.spec, async_net, network,
+                                 self.model_bytes)
 
         # two-tier hierarchy (ProtocolConfig.tiers): per-cluster intra
         # state + inter-tier state; aggregator uplinks get their own
@@ -280,7 +299,7 @@ class DecentralizedLearner:
     # ------------------------------------------------------------------
     def _make_step(self):
         loss_fn, opt = self.loss_fn, self.opt
-        proto, weights = self.protocol, self.sample_weights
+        weights = self.sample_weights
         spec = self.spec
         tiers = self.tiers
         track_div = self.track_divergence
@@ -321,15 +340,16 @@ class DecentralizedLearner:
                 # (priced into bytes host-side, in int64)
                 link_counts = jnp.stack([xfers, res.link_msgs], axis=-1)
                 if net is not None:
-                    act = (active if active is not None
-                           else jnp.ones((m,), bool))
                     net_time = net_cost.round_network_time(
-                        xfers, act, rec.messages, model_bytes, bw, lat)
+                        xfers, res.link_msgs, model_bytes, bw, lat)
                 else:
                     net_time = jnp.float32(0.0)
             else:
+                # the intra tier runs THIS engine's (possibly asyncified)
+                # spec — resolve_spec on a spec is the identity, so the
+                # hierarchy sees exactly the stages the flat path would
                 hres = apply_hierarchical(
-                    proto, tiers, params, sync_state, weights, active)
+                    spec, tiers, params, sync_state, weights, active)
                 params, sync_state, rec = hres.params, hres.state, hres.rec
                 xfers = hres.member_xfers
                 link_counts = jnp.stack([
@@ -337,21 +357,16 @@ class DecentralizedLearner:
                     jnp.concatenate([hres.member_msgs, hres.agg_msgs]),
                 ], axis=-1)
                 if net is not None:
-                    act = (active if active is not None
-                           else jnp.ones((m,), bool))
-                    g = tiers.num_clusters
-                    agg_act = jnp.any(act.reshape(g, -1), axis=1)
                     # the round's network time is the two tiers back to
                     # back: members sync with their aggregator, then the
                     # aggregators with the top coordinator
                     net_time = (
                         net_cost.round_network_time(
-                            hres.member_xfers, act,
-                            jnp.sum(hres.member_msgs), model_bytes, bw, lat)
+                            hres.member_xfers, hres.member_msgs,
+                            model_bytes, bw, lat)
                         + net_cost.round_network_time(
-                            hres.agg_xfers, agg_act,
-                            jnp.sum(hres.agg_msgs), inter_model_bytes,
-                            agg_bw, agg_lat))
+                            hres.agg_xfers, hres.agg_msgs,
+                            inter_model_bytes, agg_bw, agg_lat))
                 else:
                     net_time = jnp.float32(0.0)
             if fleet is not None:
@@ -364,8 +379,21 @@ class DecentralizedLearner:
             div = divergence(params) if track_div else jnp.zeros(())
             num_active = (jnp.sum(active).astype(jnp.int32)
                           if active is not None else jnp.int32(m))
+            # async-timeline observability: summarize the trigger-carried
+            # state AFTER the round. Key membership is static, so
+            # protocols without a timeline/age trade zero device work for
+            # the constant zeros.
+            extra = (sync_state.extra if tiers is None
+                     else sync_state.intra.extra)
+            num_inflight = (jnp.sum(extra["inflight"] > 0).astype(jnp.int32)
+                            if "inflight" in extra else jnp.int32(0))
+            age_key = next(
+                (k for k in ("age", "staleness") if k in extra), None)
+            max_age = (jnp.max(extra[age_key]).astype(jnp.int32)
+                       if age_key is not None else jnp.int32(0))
             return params, opt_state, sync_state, ProtocolMetrics(
-                losses, rec, div, num_active, net_time, xfers, link_counts)
+                losses, rec, div, num_active, net_time, xfers, link_counts,
+                num_inflight, max_age)
 
         return step
 
@@ -405,6 +433,7 @@ class DecentralizedLearner:
         transfer; the ``telemetry=False`` program is byte-identical to
         the pre-telemetry fold."""
         fields = ops.CommRecord._fields
+        carries_state = bool(self.spec.extra_state)
 
         def fold(metrics: ProtocolMetrics):
             if chunked:     # leaves carry a leading round axis: reduce it
@@ -441,6 +470,13 @@ class DecentralizedLearner:
                              for k in fields},
                     "link_counts": lead(metrics.link_counts),
                 }
+                if carries_state:
+                    # in-flight / staleness-age series, only for triggers
+                    # that actually carry state (async timeline, stale) —
+                    # records of stateless runs stay unchanged
+                    out["per_round"]["num_inflight"] = lead(
+                        metrics.num_inflight)
+                    out["per_round"]["max_age"] = lead(metrics.max_age)
             return out
 
         return fold

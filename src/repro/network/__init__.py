@@ -1,7 +1,7 @@
 # The simulated network environment: peer topologies, per-round learner
 # availability, and link-cost accounting. Everything here is pure JAX so it
 # composes with the scanned protocol engine (one compiled program per chunk).
-from repro.network import availability, cost, topology  # noqa: F401
+from repro.network import availability, cost, events, topology  # noqa: F401
 from repro.network.availability import sample as sample_availability  # noqa: F401
 from repro.network.cost import link_profile, round_network_time  # noqa: F401
 from repro.network.topology import adjacency  # noqa: F401

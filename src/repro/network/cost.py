@@ -8,8 +8,8 @@ periodic/fedavg/dynamic, to its peers for gossip), assigned a class from
 The timing model is *parallel links*: within a round every participating
 link transfers concurrently, so the round's network time is the slowest
 link's ``transfers_i * (latency_i + model_bytes / bandwidth_i)``, plus one
-control-plane round-trip over the slowest ACTIVE link whenever scalar
-messages were exchanged (violation notices / poll requests). Per-link
+control-plane round-trip over the slowest link that actually SENT a
+message (violation notices / poll requests). Per-link
 *bytes* are exact — ``transfers_i * model_bytes`` — and extend the paper's
 ``comm_bytes`` accounting from a fleet total to a per-link breakdown.
 """
@@ -72,17 +72,21 @@ def uniform_profile(link_class: str, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
             jnp.full((n,), c.latency, jnp.float32))
 
 
-def round_network_time(xfers, active, messages, model_bytes: int,
+def round_network_time(xfers, link_msgs, model_bytes: int,
                        bw, lat) -> jnp.ndarray:
     """Simulated seconds one round of the protocol spends on the network.
 
     ``xfers``: (m,) int32 models crossing each learner's link this round;
-    ``active``: (m,) bool reachability mask; ``messages``: scalar int32
-    control messages; ``bw``/``lat``: ``link_profile`` arrays.
+    ``link_msgs``: (m,) int32 control messages each link SENT (the
+    ledger's message column); ``bw``/``lat``: ``link_profile`` arrays.
+
+    The control-plane term prices one round-trip over the slowest link
+    that actually sent a message — not the slowest merely-reachable
+    link, which used to bill a silent slow link for chatter that never
+    crossed it. A round with no messages contributes exactly 0.
     """
     per_link = xfers.astype(jnp.float32) * (
         lat + jnp.float32(model_bytes) / bw)
     t_models = jnp.max(per_link, initial=0.0)
-    slowest_active = jnp.max(jnp.where(active, lat, 0.0), initial=0.0)
-    t_msgs = jnp.where(messages > 0, 2.0 * slowest_active, 0.0)
-    return t_models + t_msgs
+    slowest_msg = jnp.max(jnp.where(link_msgs > 0, lat, 0.0), initial=0.0)
+    return t_models + 2.0 * slowest_msg

@@ -1,0 +1,120 @@
+"""Discrete-event network timeline primitives for the scanned round loop.
+
+The round-synchronous engine treats every sync as instantaneous: the
+availability mask decides WHO communicates, never WHEN the payload lands.
+This module supplies the arithmetic that turns each sync into a message
+in flight: a per-learner flight time derived from the
+``repro.network.cost`` link classes, quantized against a per-round time
+budget into ``k = ceil(round_trip / budget) - 1`` extra rounds in the
+air (an exchange that fits inside one round budget lands the same round,
+which is exactly the synchronous engine), and a bounded-delay ring
+buffer carried in ``SyncState.extra`` that schedules the arrival.
+
+Everything here is a pure function of static parameters and the scan
+carry — flight times are resolved at trace time from the protocol's
+scalar params (the comma-joined link-class string mirrors the engine's
+round-robin link profile), and the ring arithmetic is index math on the
+carried ``(m, depth)`` buffer, so the timeline stays pure in
+``(seed, t)`` and lives entirely inside ``lax.scan``. The registered
+event-driven trigger stages that consume these primitives are in
+``repro.core.sync.async_sync``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.network.cost import LINK_CLASSES
+
+
+# ---------------------------------------------------------------------------
+# static flight-time resolution (trace time; python/numpy only)
+# ---------------------------------------------------------------------------
+
+def parse_link_classes(csv: str) -> Tuple[str, ...]:
+    """Parse the comma-joined link-class protocol param (scalar-only spec
+    params cannot carry tuples). ``""`` means an ideal network: every
+    exchange lands inside the round it was launched."""
+    if not csv:
+        return ()
+    names = tuple(s.strip() for s in csv.split(",") if s.strip())
+    unknown = sorted(set(names) - set(LINK_CLASSES))
+    if unknown:
+        raise ValueError(
+            f"unknown link class(es) {unknown} in {csv!r} — known: "
+            f"{sorted(LINK_CLASSES)}")
+    return names
+
+
+def round_trip_time(name: str, payload_bytes: int) -> float:
+    """Seconds for one sync exchange on a class link: the model up and
+    the aggregate back down — ``2 * (latency + payload/bandwidth)``, the
+    same per-transfer expression ``cost.round_network_time`` prices."""
+    lc = LINK_CLASSES[name]
+    return 2.0 * (lc.latency + float(payload_bytes) / lc.bandwidth)
+
+
+def class_flight_rounds(csv: str, payload_bytes: int,
+                        budget: float) -> Dict[str, int]:
+    """Whole rounds each class's exchange spends IN FLIGHT, per class.
+    An exchange that fits inside one round budget costs 0 extra rounds
+    (it lands the round it was launched — the synchronous limit), so
+    ``k = max(0, ceil(round_trip / budget) - 1)``."""
+    return {
+        name: max(0, math.ceil(round_trip_time(name, payload_bytes)
+                               / budget) - 1)
+        for name in parse_link_classes(csv)
+    }
+
+
+def max_flight_rounds(csv: str, payload_bytes: int, budget: float) -> int:
+    """The largest per-class flight time — m-independent, so spec
+    validation can bound the ring depth without knowing the fleet size."""
+    return max(class_flight_rounds(csv, payload_bytes, budget).values(),
+               default=0)
+
+
+def flight_rounds(csv: str, m: int, payload_bytes: int,
+                  budget: float) -> jnp.ndarray:
+    """(m,) int32 per-learner flight rounds, round-robin over the named
+    classes — the same learner->class assignment as
+    ``cost.link_profile`` and the ledger's rows."""
+    names = parse_link_classes(csv)
+    if not names:
+        return jnp.zeros((m,), jnp.int32)
+    per_class = class_flight_rounds(csv, payload_bytes, budget)
+    return jnp.asarray(
+        np.asarray([per_class[names[i % len(names)]] for i in range(m)],
+                   np.int32))
+
+
+# ---------------------------------------------------------------------------
+# bounded-delay ring buffer (traced; carried in SyncState.extra)
+# ---------------------------------------------------------------------------
+
+def empty_ring(m: int, depth: int) -> jnp.ndarray:
+    """(m, depth) int32 arrival buffer: slot ``t % depth`` of row i holds
+    1 iff learner i's in-flight exchange lands at round t."""
+    return jnp.zeros((m, depth), jnp.int32)
+
+
+def due_mask(ring: jnp.ndarray, t) -> jnp.ndarray:
+    """(m,) bool — whose exchange lands this round."""
+    depth = ring.shape[1]
+    return jnp.take(ring, t % depth, axis=1) > 0
+
+
+def ring_step(ring: jnp.ndarray, t, launch: jnp.ndarray,
+              k: jnp.ndarray) -> jnp.ndarray:
+    """One timeline transition: consume round-t arrivals (clear the
+    current slot) and schedule this round's launches ``k`` rounds out.
+    A learner launches only while idle (its row is empty), and spec
+    validation pins ``k < depth``, so a scheduled slot can never collide
+    with a pending one — the buffer is exact, not approximate."""
+    m, depth = ring.shape
+    cleared = ring.at[:, t % depth].set(0)
+    return cleared.at[jnp.arange(m), (t + k) % depth].add(
+        launch.astype(jnp.int32))

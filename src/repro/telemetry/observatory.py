@@ -25,8 +25,8 @@ from repro.telemetry.record import (
     KIND_CHUNK, KIND_EVENT, KIND_META, KIND_ROUND, validate_record,
 )
 
-__all__ = ["Run", "load_run", "iter_records", "frontier", "summarize",
-           "prom_text", "tail_records"]
+__all__ = ["Run", "load_run", "iter_records", "frontier", "age_histogram",
+           "summarize", "prom_text", "tail_records"]
 
 
 @dataclass
@@ -149,6 +149,47 @@ def link_class_bytes(run: Run) -> Dict[str, int]:
     return out
 
 
+def _flat_int_lists(node: Any, prefix: str = "") -> Dict[str, List[int]]:
+    """Walk a ``stale_age`` snapshot (nested dicts of lists), yielding the
+    1-D integer vectors keyed by dotted path. Deeper nestings — e.g. the
+    async timeline's (m, depth) delay ring — are bookkeeping, not
+    per-learner counters, and are skipped."""
+    out: Dict[str, List[int]] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            key = f"{prefix}.{k}" if prefix else str(k)
+            out.update(_flat_int_lists(v, key))
+        return out
+    if (isinstance(node, list) and node
+            and all(isinstance(x, (int, float)) and not isinstance(x, bool)
+                    for x in node)):
+        out[prefix] = [int(x) for x in node]
+    return out
+
+
+def age_histogram(run: Run) -> Dict[str, Any]:
+    """Per-counter value histogram of the chunk-end trigger-state
+    snapshot (the last chunk record's ``stale_age``): for each carried
+    per-learner vector — staleness ages, in-flight countdowns, local
+    clocks — the value→count map plus min/max/mean. Empty dict when the
+    run's protocol carries no trigger state."""
+    if not run.chunks:
+        return {}
+    snap = run.chunks[-1].get("stale_age")
+    if snap is None:
+        return {}
+    out: Dict[str, Any] = {}
+    for key, vals in sorted(_flat_int_lists(snap).items()):
+        hist: Dict[str, int] = {}
+        for v in vals:
+            hist[str(v)] = hist.get(str(v), 0) + 1
+        out[key] = {
+            "min": min(vals), "max": max(vals), "mean": _mean(vals),
+            "hist": hist,
+        }
+    return out
+
+
 def summarize(run: Run, points: int = 50) -> Dict[str, Any]:
     """The run card — JSON-ready, built from the stream alone."""
     meta, rounds = run.meta, run.rounds
@@ -186,6 +227,15 @@ def summarize(run: Run, points: int = 50) -> Dict[str, Any]:
     if meta.get("tiers") is not None:
         out["uplink_bytes"] = sum(
             r.get("uplink_bytes") or 0 for r in rounds)
+    ages = age_histogram(run)
+    if ages:
+        out["state_ages"] = ages
+    if any(r.get("inflight") is not None for r in rounds):
+        out["inflight"] = _downsample(
+            [[r["round"], r.get("inflight") or 0, r.get("max_age") or 0]
+             for r in rounds], points)
+        out["inflight_last"] = last.get("inflight") or 0
+        out["max_age_last"] = last.get("max_age") or 0
     walls = [c["wall_s"] for c in run.chunks if "wall_s" in c]
     if walls:
         out["profile"] = {

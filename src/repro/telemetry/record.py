@@ -79,7 +79,10 @@ class RoundRecord:
     accounting (the per-link ledger sum under a hierarchy). ``link_bytes``
     is the optional per-link byte vector for this round
     (``TelemetryConfig.per_link``); ``uplink_bytes`` the aggregator-uplink
-    share under a hierarchy."""
+    share under a hierarchy. ``inflight``/``max_age`` are written only by
+    state-carrying protocols (async timeline / bounded staleness): the
+    number of learners with a message still in flight after the round and
+    the oldest rounds-since-sync counter."""
     round: int              # 1-based global round index
     loss: float             # fleet loss this round (sum over learners)
     cum_loss: float
@@ -97,6 +100,8 @@ class RoundRecord:
     v: int = SCHEMA_VERSION
     link_bytes: Optional[Tuple[int, ...]] = None   # (L,) this round
     uplink_bytes: Optional[int] = None             # hierarchy uplink share
+    inflight: Optional[int] = None                 # learners in flight
+    max_age: Optional[int] = None                  # oldest sync-age counter
 
     _INT_FIELDS = ("round", "messages", "cohort", "sync", "full_sync",
                    "cum_syncs", "num_active", "round_bytes", "cum_bytes")
@@ -114,6 +119,10 @@ class RoundRecord:
             d["link_bytes"] = [int(x) for x in self.link_bytes]
         if self.uplink_bytes is not None:
             d["uplink_bytes"] = int(self.uplink_bytes)
+        if self.inflight is not None:
+            d["inflight"] = int(self.inflight)
+        if self.max_age is not None:
+            d["max_age"] = int(self.max_age)
         return d
 
     @classmethod
@@ -135,6 +144,10 @@ class RoundRecord:
             kw["link_bytes"] = tuple(int(x) for x in d["link_bytes"])
         if d.get("uplink_bytes") is not None:
             kw["uplink_bytes"] = int(d["uplink_bytes"])
+        if d.get("inflight") is not None:
+            kw["inflight"] = _as_int(d, "inflight")
+        if d.get("max_age") is not None:
+            kw["max_age"] = _as_int(d, "max_age")
         known = {f.name for f in fields(cls)}
         unknown = sorted(set(d) - known - {"kind"})
         if unknown:

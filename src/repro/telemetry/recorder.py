@@ -120,6 +120,12 @@ class RoundRecorder:
         num_active = np.asarray(per["num_active"], np.int64)
         net_time = np.asarray(per["net_time"], np.float64)
         link_bytes = self.price(np.asarray(per["link_counts"]))   # (n, L)
+        # state-carrying protocols only (async timeline / staleness):
+        # per-round in-flight count and oldest sync-age counter
+        inflight = (np.asarray(per["num_inflight"], np.int64)
+                    if "num_inflight" in per else None)
+        max_age = (np.asarray(per["max_age"], np.int64)
+                   if "max_age" in per else None)
 
         if self.hierarchical:
             round_bytes = link_bytes.sum(axis=1)
@@ -160,6 +166,8 @@ class RoundRecorder:
                 round_bytes=int(round_bytes[t]),
                 cum_bytes=int(cum_bytes[t]),
                 link_bytes=lb, uplink_bytes=uplink,
+                inflight=None if inflight is None else int(inflight[t]),
+                max_age=None if max_age is None else int(max_age[t]),
             ).to_dict())
 
         self._chunks += 1

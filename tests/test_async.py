@@ -1,0 +1,365 @@
+"""The event-driven async network timeline (ISSUE 9).
+
+Claims pinned here:
+
+* **delay math** — flight times come from the ``repro.network.cost``
+  link classes: an exchange flies ``k = ceil(round_trip/budget) - 1``
+  whole rounds through the bounded arrival ring, and a ring too shallow
+  for the slowest class is rejected at spec construction.
+* **zero-delay reduction** — a round budget covering the slowest link's
+  round trip makes EVERY async composition bitwise-equal to its
+  synchronous original: comm counters, per-link ledger, simulated
+  net-time and a params SHA-256, across all presets, both layouts, and
+  random availability masks (the hypothesis property).
+* **nonzero delays** — messages fly whole rounds (the engine's
+  ``num_inflight``/``max_age`` metrics see them) and the int64 ledger
+  stays exact.
+* **aircomp** — the analog channel prices ONE shared-medium exchange in
+  c(f) while the ledger bills each member's airtime; the noise draw is
+  pure in ``(air_seed, t)`` and vanishes as snr_db grows.
+* **determinism** — the whole timeline is pure in ``(seed, t)``: two
+  identical telemetered runs stream byte-identical JSONL.
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AsyncConfig, NetworkConfig, TelemetryConfig
+from repro.core.protocol import DecentralizedLearner
+from repro.core.sync import PROTOCOLS
+from repro.core.sync.async_sync import asyncify
+from repro.network import events
+from repro.telemetry.observatory import load_run, summarize
+
+from hypothesis_compat import given, settings, st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# tiny deterministic fleet: linear model, synthetic regression batches
+# ---------------------------------------------------------------------------
+
+def _loss(p, batch):
+    x, y = batch
+    return jnp.mean((x @ p["w"] - y) ** 2)
+
+
+def _init(key):
+    return {"w": jax.random.normal(key, (4,)) * 0.1}
+
+
+def _batches(m, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (n, m, 8, 4))
+    ys = jnp.sum(xs, axis=-1) * 0.5
+    return (xs, ys)
+
+
+def _digest(params) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def _fingerprint(spec, *, network=None, async_net=None, m=4, rounds=8,
+                 seed=0, telemetry=None):
+    """Run a small fleet and return everything the bitwise claims cover."""
+    dl = DecentralizedLearner(_loss, _init, m, spec, seed=seed,
+                              network=network, async_net=async_net,
+                              telemetry=telemetry)
+    metrics = dl.run_chunk(_batches(m, rounds, seed))
+    return dl, metrics, (dict(dl.comm_totals),
+                         np.asarray(dl.link_bytes_totals).tolist(),
+                         float(dl.network_time), _digest(dl.params))
+
+
+# every synchronous preset, with the trigger thresholds the zero-delay
+# property exercises (the raw presets would sync every round)
+BASE_SPECS = {
+    "periodic": PROTOCOLS["periodic"].with_params(b=2),
+    "continuous": PROTOCOLS["continuous"],
+    "fedavg": PROTOCOLS["fedavg"].with_params(b=2),
+    "gossip": PROTOCOLS["gossip"].with_params(b=2),
+    "dynamic": PROTOCOLS["dynamic"].with_params(b=1, delta=0.05),
+    "nosync": PROTOCOLS["nosync"],
+    "stale": PROTOCOLS["stale"].with_params(tau=3),
+}
+
+# budget >> the slowest round trip at this payload: every flight is k=0
+ZERO_DELAY = AsyncConfig(round_budget=60.0)
+
+
+# ---------------------------------------------------------------------------
+# delay math: repro.network.events
+# ---------------------------------------------------------------------------
+
+def test_flight_rounds_from_link_classes():
+    # at a 100 kB payload and a 1 s budget: lte's round trip is 0.14 s
+    # (fits the budget -> synchronous), edge's is 2*(0.2 + 0.8) = 2 s
+    # -> one whole round in flight
+    assert events.class_flight_rounds("lte,edge", 100_000, 1.0) == {
+        "lte": 0, "edge": 1}
+    assert events.max_flight_rounds("lte,edge", 100_000, 1.0) == 1
+    # budget covering the slowest round trip: everything synchronous
+    assert events.class_flight_rounds("lte,edge", 100_000, 60.0) == {
+        "lte": 0, "edge": 0}
+    # per-learner assignment is round-robin like cost.link_profile
+    k = events.flight_rounds("lte,edge", 5, 100_000, 1.0)
+    assert np.asarray(k).tolist() == [0, 1, 0, 1, 0]
+    assert events.class_flight_rounds("", 100_000, 1.0) == {}
+    with pytest.raises(ValueError, match="warp-drive"):
+        events.class_flight_rounds("warp-drive", 0, 1.0)
+
+
+def test_round_trip_time_matches_cost_model():
+    from repro.network.cost import LINK_CLASSES
+    lc = LINK_CLASSES["edge"]
+    want = 2.0 * (lc.latency + 100_000 / lc.bandwidth)
+    assert events.round_trip_time("edge", 100_000) == pytest.approx(want)
+
+
+def test_arrival_ring_mechanics():
+    ring = events.empty_ring(3, 4)
+    assert not bool(jnp.any(events.due_mask(ring, 0)))
+    launch = jnp.asarray([True, False, True])
+    k = jnp.asarray([2, 0, 1], jnp.int32)
+    ring = events.ring_step(ring, 5, launch, k)      # t=5: clear slot 1
+    # learner 2 lands at t=6 (slot 2), learner 0 at t=7 (slot 3)
+    assert np.asarray(events.due_mask(ring, 6)).tolist() == [
+        False, False, True]
+    assert np.asarray(events.due_mask(ring, 7)).tolist() == [
+        True, False, False]
+    # consuming t=6's slot clears it for the next ring lap
+    ring = events.ring_step(ring, 6, jnp.zeros(3, bool), k)
+    assert not bool(jnp.any(events.due_mask(ring, 6)))
+    assert np.asarray(events.due_mask(ring, 7)).tolist() == [
+        True, False, False]
+
+
+def test_ring_too_shallow_is_rejected():
+    with pytest.raises(ValueError, match="max_delay"):
+        PROTOCOLS["async_periodic"].with_params(payload_bytes=100_000_000)
+
+
+# ---------------------------------------------------------------------------
+# asyncify: the AsyncConfig -> spec rewrite
+# ---------------------------------------------------------------------------
+
+def test_asyncify_rewrites_triggers_and_keeps_params():
+    net = NetworkConfig(link_classes=("lte", "edge"))
+    sp = asyncify(PROTOCOLS["periodic"].with_params(b=3),
+                  AsyncConfig(), net, model_bytes=100_000)
+    assert sp.trigger == "events"
+    p = dict(sp.params)
+    assert p["base"] == "cadence" and p["b"] == 3
+    assert p["link_classes"] == "lte,edge" and p["payload_bytes"] == 100_000
+    sp = asyncify(PROTOCOLS["dynamic"].with_params(delta=0.2),
+                  AsyncConfig(payload_bytes=64), net, model_bytes=100_000)
+    assert sp.trigger == "events_divergence"
+    assert dict(sp.params)["payload_bytes"] == 64    # explicit beats model
+    assert dict(sp.params)["delta"] == 0.2
+    sp = asyncify(PROTOCOLS["stale"].with_params(tau=3), AsyncConfig(), net,
+                  model_bytes=8)
+    assert sp.trigger == "events" and dict(sp.params)["base"] == "staleness"
+    # "never" has no timeline to rewrite
+    assert asyncify(PROTOCOLS["nosync"], AsyncConfig(), net,
+                    model_bytes=8).trigger == "never"
+
+
+def test_asyncify_aircomp_needs_mean_average():
+    net = NetworkConfig()
+    sp = asyncify(PROTOCOLS["periodic"], AsyncConfig(aircomp=True, snr_db=10),
+                  net, model_bytes=8)
+    assert sp.aggregate == "aircomp" and sp.commit == "aircomp"
+    assert dict(sp.params)["snr_db"] == 10.0
+    with pytest.raises(ValueError, match="over-the-air"):
+        asyncify(PROTOCOLS["gossip"], AsyncConfig(aircomp=True), net,
+                 model_bytes=8)
+
+
+# ---------------------------------------------------------------------------
+# the zero-delay reduction: bitwise equality with the synchronous engine
+# ---------------------------------------------------------------------------
+
+def test_zero_delay_matrix_bitwise():
+    """Every preset x {tree, flat} under lossy availability: attaching a
+    covering-budget AsyncConfig changes NOTHING — same counters, same
+    per-link ledger, same simulated seconds, same parameter bytes."""
+    net = NetworkConfig(link_classes=("wired", "wifi"), act_prob=0.8,
+                        seed=3)
+    for name, spec in BASE_SPECS.items():
+        for layout in ("tree", "flat"):
+            s = spec.with_params(layout=layout)
+            _, _, sync_fp = _fingerprint(s, network=net)
+            _, _, async_fp = _fingerprint(s, network=net,
+                                          async_net=ZERO_DELAY)
+            assert async_fp == sync_fp, (name, layout)
+
+
+@settings(max_examples=6, deadline=None)
+@given(name=st.sampled_from(sorted(BASE_SPECS)),
+       layout=st.sampled_from(("tree", "flat")),
+       act=st.floats(min_value=0.3, max_value=1.0),
+       straggler=st.floats(min_value=0.0, max_value=0.5),
+       avail_seed=st.integers(0, 2**16))
+def test_zero_delay_random_availability_property(name, layout, act,
+                                                 straggler, avail_seed):
+    net = NetworkConfig(link_classes=("wired", "wifi"), act_prob=act,
+                        straggler_frac=straggler, seed=avail_seed)
+    s = BASE_SPECS[name].with_params(layout=layout)
+    _, _, sync_fp = _fingerprint(s, network=net, rounds=6, m=3)
+    _, _, async_fp = _fingerprint(s, network=net, async_net=ZERO_DELAY,
+                                  rounds=6, m=3)
+    assert async_fp == sync_fp
+
+
+# ---------------------------------------------------------------------------
+# nonzero delays: messages fly whole rounds
+# ---------------------------------------------------------------------------
+
+def test_inflight_alternates_on_edge_links():
+    """async_periodic's lte/edge fleet at the 1 s budget: the edge
+    learners' exchanges fly exactly one round, so after odd rounds both
+    edge links are in flight and after even rounds both have landed."""
+    dl, metrics, _ = _fingerprint(PROTOCOLS["async_periodic"], m=4,
+                                  rounds=6)
+    assert np.asarray(metrics.num_inflight).tolist() == [2, 0, 2, 0, 2, 0]
+    # sigma_b's all-reachable cohort resets every age at each commit
+    assert np.asarray(metrics.max_age).tolist() == [0] * 6
+    assert dl.comm_totals["syncs"] == 6
+    ex = dl._state_extra()
+    assert sorted(ex) == ["age", "inflight", "lclock", "ring"]
+    assert all(np.asarray(v).dtype == np.int32 for v in ex.values())
+
+
+def test_quiet_timeline_ages_grow():
+    """A divergence threshold nothing crosses: no learner ever fires, so
+    the carried ages grow one per round and nothing is ever in flight."""
+    spec = PROTOCOLS["async_dynamic"].with_params(delta=1e9)
+    dl, metrics, _ = _fingerprint(spec, m=4, rounds=5)
+    assert np.asarray(metrics.max_age).tolist() == [1, 2, 3, 4, 5]
+    assert np.asarray(metrics.num_inflight).tolist() == [0] * 5
+    assert dl.comm_totals["syncs"] == 0
+
+
+def test_nonzero_delay_ledger_stays_exact():
+    """Flights shift WHEN transfers happen, never how they are priced:
+    the int64 ledger equals the per-round transfer counts times the
+    payload, reconstructed host-side."""
+    net = NetworkConfig(link_classes=("lte", "edge"))
+    an = AsyncConfig(round_budget=1.0, payload_bytes=100_000)
+    dl, metrics, _ = _fingerprint(PROTOCOLS["periodic"], network=net,
+                                  async_net=an, m=4, rounds=10)
+    xfer_counts = np.asarray(metrics.link_counts, np.int64)[..., 0]
+    want = (xfer_counts * (dl.model_size * 4)).sum(axis=0)
+    got = np.asarray(dl.link_bytes_totals) - np.asarray(
+        metrics.link_counts, np.int64)[..., 1].sum(axis=0) * net.msg_bytes
+    assert got.tolist() == want.tolist()
+
+
+# ---------------------------------------------------------------------------
+# aircomp: over-the-air aggregation physics + pricing
+# ---------------------------------------------------------------------------
+
+def test_aircomp_prices_one_shared_medium_exchange():
+    dl, _, _ = _fingerprint(PROTOCOLS["aircomp"], m=4, rounds=5)
+    # c(f): ONE exchange per sync regardless of cohort size
+    assert dl.comm_totals == {"model_up": 5, "model_down": 5,
+                              "messages": 0, "syncs": 5, "full_syncs": 5}
+    model_bytes = dl.model_size * 4
+    assert dl.comm_bytes() == 5 * 2 * model_bytes
+    # the ledger bills each member's analog frame airtime — deliberately
+    # NOT c(f), like gossip's both-endpoints occupancy
+    assert dl.link_xfer_totals.tolist() == [5, 5, 5, 5]
+    assert int(np.asarray(dl.link_bytes_totals).sum()) == \
+        4 * 5 * model_bytes
+
+
+def test_aircomp_noise_is_pure_and_vanishes_with_snr():
+    _, _, (ct_a, lb_a, nt_a, d_a) = _fingerprint(PROTOCOLS["aircomp"])
+    _, _, (ct_b, lb_b, nt_b, d_b) = _fingerprint(PROTOCOLS["aircomp"])
+    assert d_a == d_b                       # pure in (air_seed, t)
+    _, _, (_, _, _, d_seed) = _fingerprint(
+        PROTOCOLS["aircomp"].with_params(air_seed=7))
+    assert d_seed != d_a                    # the seed IS the noise stream
+
+    clean, _, _ = _fingerprint(PROTOCOLS["periodic"])
+    quiet, _, _ = _fingerprint(
+        PROTOCOLS["aircomp"].with_params(snr_db=200.0))
+    loud, _, _ = _fingerprint(PROTOCOLS["aircomp"].with_params(snr_db=0.0))
+
+    def dist(a, b):
+        return float(sum(jnp.sum((x - y) ** 2) for x, y in
+                         zip(jax.tree.leaves(a.params),
+                             jax.tree.leaves(b.params))))
+
+    assert dist(quiet, clean) <= 1e-8       # 200 dB: the digital limit
+    assert dist(loud, clean) > dist(quiet, clean)
+
+
+# ---------------------------------------------------------------------------
+# determinism + the telemetry plane's view of the timeline
+# ---------------------------------------------------------------------------
+
+def _telemetered_run(path):
+    net = NetworkConfig(link_classes=("lte", "edge"))
+    an = AsyncConfig(round_budget=1.0, payload_bytes=100_000)
+    dl, _, _ = _fingerprint(
+        PROTOCOLS["periodic"], network=net, async_net=an, m=4, rounds=12,
+        telemetry=TelemetryConfig(path=path, per_link=True))
+    dl.recorder.close()
+    return dl
+
+
+def test_identical_runs_stream_identical_jsonl(tmp_path):
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    _telemetered_run(a)
+    _telemetered_run(b)
+    with open(a, "rb") as fa, open(b, "rb") as fb:
+        assert fa.read() == fb.read()
+
+
+def test_telemetry_sees_inflight_and_ages(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    dl = _telemetered_run(path)
+    run = load_run(path)
+    inflight = [r["inflight"] for r in run.rounds]
+    assert inflight == [2, 0] * 6           # the edge flights, per round
+    assert all(r["max_age"] == 0 for r in run.rounds)
+    # the chunk snapshot carries the full timeline state...
+    snap = run.chunks[-1]["stale_age"]
+    assert sorted(snap) == ["age", "inflight", "lclock", "ring"]
+    # ...and the run card histograms the per-learner counters (the 2-D
+    # arrival ring is bookkeeping, not a counter — skipped)
+    card = summarize(run)
+    assert sorted(card["state_ages"]) == ["age", "inflight", "lclock"]
+    assert card["state_ages"]["inflight"]["max"] == 0   # chunk-end: landed
+    assert card["inflight_last"] == 0 and card["max_age_last"] == 0
+    assert card["inflight"][0][1] == 2
+    assert dl.comm_totals["syncs"] == run.rounds[-1]["cum_syncs"]
+
+
+# ---------------------------------------------------------------------------
+# the example is runnable (subprocess; excluded from tier-1 via -m slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_async_fleet_example_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "async_fleet.py"),
+         "--smoke"],
+        capture_output=True, text=True, env=env, timeout=600, cwd=REPO)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "async_fleet_done" in r.stdout

@@ -151,19 +151,42 @@ def test_round_network_time_slowest_link():
     bw = jnp.asarray([1e6, 1e3], jnp.float32)       # bytes/s
     lat = jnp.asarray([0.0, 0.0], jnp.float32)
     xfers = jnp.asarray([2, 2], jnp.int32)
-    active = jnp.ones((2,), bool)
-    t = cost.round_network_time(xfers, active, jnp.int32(0), 1000, bw, lat)
+    no_msgs = jnp.zeros((2,), jnp.int32)
+    t = cost.round_network_time(xfers, no_msgs, 1000, bw, lat)
     # slowest link: 2 transfers * 1000B / 1e3 B/s = 2s (parallel links)
     assert np.isclose(float(t), 2.0)
-    t0 = cost.round_network_time(jnp.zeros(2, jnp.int32), active,
-                                 jnp.int32(0), 1000, bw, lat)
+    t0 = cost.round_network_time(jnp.zeros(2, jnp.int32), no_msgs,
+                                 1000, bw, lat)
     assert float(t0) == 0.0
-    # control messages add a round-trip on the slowest ACTIVE link
+    # control messages add a round-trip on the slowest link that SENT one
     lat2 = jnp.asarray([0.1, 0.4], jnp.float32)
     tm = cost.round_network_time(jnp.zeros(2, jnp.int32),
-                                 jnp.asarray([True, False]),
-                                 jnp.int32(3), 1000, bw, lat2)
+                                 jnp.asarray([3, 0], jnp.int32),
+                                 1000, bw, lat2)
     assert np.isclose(float(tm), 0.2)
+    tm_slow = cost.round_network_time(jnp.zeros(2, jnp.int32),
+                                      jnp.asarray([0, 1], jnp.int32),
+                                      1000, bw, lat2)
+    assert np.isclose(float(tm_slow), 0.8)
+
+
+def test_round_network_time_message_term_bitwise():
+    # Regression for the 2*RTT term: a round with no messages must price
+    # the model term EXACTLY (no phantom round-trip over a silent link),
+    # and a round where every link messages adds exactly 2 * max(lat).
+    bw = jnp.asarray([1e6, 1e3, 25e6], jnp.float32)
+    lat = jnp.asarray([0.05, 0.4, 0.005], jnp.float32)
+    xfers = jnp.asarray([1, 2, 0], jnp.int32)
+    per_link = xfers.astype(jnp.float32) * (lat + jnp.float32(1000) / bw)
+    t_models = jnp.max(per_link, initial=0.0)
+
+    silent = cost.round_network_time(xfers, jnp.zeros(3, jnp.int32),
+                                     1000, bw, lat)
+    assert float(silent) == float(t_models)          # bitwise: no 2*RTT term
+
+    chatty = cost.round_network_time(xfers, jnp.ones(3, jnp.int32),
+                                     1000, bw, lat)
+    assert float(chatty) == float(t_models + 2.0 * jnp.max(lat))
 
 
 # ---------------------------------------------------------------------------

@@ -186,6 +186,33 @@ def test_round_record_json_roundtrip(rnd, msgs, cohort, sync, loss, nt,
     assert back == rec
 
 
+def test_round_record_async_fields_roundtrip_and_card(tmp_path):
+    """The optional in-flight/age fields survive the JSON round-trip,
+    and a state-carrying run's card (``summarize``) histograms the
+    chunk-end trigger-state snapshot."""
+    rec = RoundRecord(
+        round=1, loss=1.0, cum_loss=1.0, divergence=0.0, messages=0,
+        cohort=0, sync=0, full_sync=0, cum_syncs=0, num_active=4,
+        net_time=0.0, cum_net_time=0.0, round_bytes=0, cum_bytes=0,
+        inflight=3, max_age=7)
+    back = RoundRecord.from_dict(json.loads(json.dumps(rec.to_dict())))
+    assert back == rec
+    with pytest.raises(ValueError, match="must be an integer"):
+        RoundRecord.from_dict({**rec.to_dict(), "inflight": 1.5})
+
+    from repro.core.sync import PROTOCOLS
+    path = str(tmp_path / "stale.jsonl")
+    dl, streams = _learner(PROTOCOLS["stale"].with_params(tau=3), None,
+                           telemetry=TelemetryConfig(path=path))
+    dl.run_chunk(streams.next_chunk(12))
+    dl.recorder.close()
+    card = summarize(load_run(path))
+    ages = card["state_ages"]["staleness"]
+    assert ages["min"] >= 0 and ages["max"] <= 3
+    assert sum(ages["hist"].values()) == M       # one bucket per learner
+    assert all(r["max_age"] is not None for r in load_run(path).rounds)
+
+
 def test_round_record_rejects_bad_streams():
     base = RoundRecord(
         round=1, loss=1.0, cum_loss=1.0, divergence=0.0, messages=0,
