@@ -35,6 +35,7 @@ from benchmarks import (
     fig_hierarchy,
     fig_network_regimes,
     kernel_bench,
+    robust_bench,
     roofline_table,
     scan_driver,
     shard_bench,
@@ -57,6 +58,7 @@ ALL = [
     sync_bench,
     shard_bench,
     async_bench,
+    robust_bench,
     kernel_bench,
     roofline_table,
 ]

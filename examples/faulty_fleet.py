@@ -1,0 +1,132 @@
+"""A faulty fleet: crashes, adversaries, and the robust pipeline.
+
+The paper's learners are reliable: always up, always honest. Real
+fleets aren't — nodes crash and rejoin having lost local state, radios
+corrupt payloads into NaNs, and a compromised node can ship
+sign-flipped parameters on purpose. Attaching a ``FaultConfig``
+injects all of that INSIDE the scanned round, every fault a pure
+function of ``(fault_seed, t)`` (``repro.network.faults``), and the
+defenses are just registered stages (``repro.core.sync.robust``):
+
+* plain ``dynamic`` averages whatever arrives — one sign-flipper per
+  five learners drags every sync, and the honest fleet never converges;
+* ``robust_dynamic`` swaps the mean for a trimmed mean, quarantines
+  rows that are non-finite or far from the reference, and warm-starts
+  them from the reference model — crashed learners rejoin cold and get
+  healed by the same path that resets the adversaries every sync.
+
+The walkthrough runs both pipelines under the SAME fault schedule
+(crash episodes + 20% sign-flipping adversaries), streams them through
+the telemetry plane, and rebuilds the observatory fault card — faulty
+learners per round, quarantine and recovery counts — from the JSONL
+alone. Progress goes through the structured event logger, the same
+stream a launcher would scrape.
+
+    PYTHONPATH=src python examples/faulty_fleet.py [--smoke]
+"""
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+from repro.config import (
+    FaultConfig, ProtocolConfig, TelemetryConfig, TrainConfig, get_arch,
+)
+from repro.data.synthetic import GraphicalModelStream
+from repro.models.cnn import cnn_loss, init_cnn_params
+from repro.network import faults as nf
+from repro.telemetry import console_handler, get_logger
+from repro.telemetry.observatory import load_run, summarize
+from repro.train.loop import run_protocol_training
+
+M = 10
+# one in five learners is a sign-flipping adversary, and every
+# 16-round window each learner has a 15% chance of a 2-4 round crash
+# it rejoins from COLD (lost params, optimizer state, sync state)
+FAULTS = FaultConfig(fault_seed=11, byzantine_frac=0.2,
+                     byzantine_mode="sign_flip",
+                     crash_prob=0.15, crash_every=16,
+                     outage_min=2, outage_max=4)
+
+
+def run_one(name, proto, rounds, jsonl, log):
+    cfg = get_arch("drift_mlp", smoke=True)
+    dl, _ = run_protocol_training(
+        lambda p, b: cnn_loss(cfg, p, b),
+        lambda k: init_cnn_params(cfg, k),
+        GraphicalModelStream(seed=0, drift_prob=0.0),
+        m=M, rounds=rounds, protocol=proto,
+        train=TrainConfig(optimizer="sgd", learning_rate=0.05),
+        batch=10, seed=0, faults=FAULTS,
+        telemetry=TelemetryConfig(path=jsonl))
+    dl.recorder.close()
+    honest = ~np.asarray(nf.byzantine_mask(FAULTS, M))
+    honest_loss = float(dl.cumulative_loss_per_learner[honest].sum())
+    log.event("fleet_run_done", protocol=name, rounds=rounds,
+              syncs=dl.comm_totals["syncs"],
+              honest_loss=round(honest_loss, 1),
+              honest_finite=bool(np.isfinite(honest_loss)))
+    return honest_loss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few rounds (CI smoke)")
+    args = ap.parse_args()
+    rounds = 32 if args.smoke else 160
+
+    log = get_logger()
+    handler = log.add_handler(console_handler())
+    out_dir = tempfile.mkdtemp(prefix="faulty_fleet_")
+
+    n_adv = int(round(FAULTS.byzantine_frac * M))
+    print(f"fleet: m={M}, {n_adv} sign-flipping adversaries, crash "
+          f"episodes at p={FAULTS.crash_prob} per {FAULTS.crash_every}"
+          f"-round window ({FAULTS.outage_min}-{FAULTS.outage_max} rounds "
+          f"down, rejoin COLD)\n")
+
+    losses = {}
+    try:
+        for name, proto in [
+            # b=1: check the divergence gate every round — at the
+            # default b=10 the adversaries drift uncontested between
+            # checks and even the robust pipeline heals too late
+            ("dynamic (mean)", ProtocolConfig(kind="dynamic", b=1,
+                                              delta=0.5)),
+            ("robust_dynamic", ProtocolConfig(kind="robust_dynamic", b=1,
+                                              delta=0.5)),
+        ]:
+            jsonl = os.path.join(out_dir, name.split()[0] + ".jsonl")
+            losses[name] = run_one(name, proto, rounds, jsonl, log)
+
+            # the observatory's view, from the stream alone: the fault
+            # card — how many learners were under a fault each round,
+            # and (for the robust pipeline) the quarantine/recovery
+            # ledger the health counters feed
+            card = summarize(load_run(jsonl))
+            faults = card.get("faults", {})
+            line = (f"{name:16s} honest_loss={losses[name]:12.1f} "
+                    f"syncs={card['cum_syncs']:3d} "
+                    f"faulty_rounds={faults.get('faulty_rounds', 0)}"
+                    f"/{rounds} max_faulty={faults.get('max_faulty', 0)}")
+            if "total_recovered" in faults:
+                line += (f" quarantined_last="
+                         f"{faults['quarantined_last']} "
+                         f"recovered_total={faults['total_recovered']}")
+            print(line)
+    finally:
+        log.remove_handler(handler)
+
+    print("\nthe plain mean averaged the flipped rows straight into "
+          "every commit — the honest fleet paid for each sync; the "
+          "robust pipeline trimmed them out of the aggregate, "
+          "quarantined them at commit, and warm-started every crashed "
+          "learner from the reference. Same engine, same scan: the "
+          "defenses are just registered stages.")
+    print("faulty_fleet_done")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,13 @@
 
 Flat-key encoding: each leaf is stored under its tree path; structure is
 rebuilt on load from the stored key strings, so no pickling is involved and
-files are portable."""
+files are portable.
+
+Every write here is ATOMIC: the file is produced under a temporary name
+in the destination directory and moved into place with ``os.replace``
+(an atomic rename on POSIX). A process crashing mid-save leaves either
+the previous complete checkpoint or the new one — never a truncated npz
+or a half-written JSON sidecar that a later restore would choke on."""
 from __future__ import annotations
 
 import os
@@ -32,9 +38,39 @@ def _path_str(p) -> str:
     return f"a:{p}"
 
 
+def _atomic_write(path: str, write_fn) -> None:
+    """Run ``write_fn(tmp_path)`` against a sibling temp file, then
+    ``os.replace`` it over ``path``. The temp file lives in the SAME
+    directory (``os.replace`` must not cross filesystems) and is cleaned
+    up if the write itself fails."""
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        write_fn(tmp)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
+def _atomic_text(path: str, text: str) -> None:
+    def write(tmp):
+        with open(tmp, "w") as f:
+            f.write(text)
+    _atomic_write(path, write)
+
+
 def save_pytree(path: str, tree) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **_flatten_with_paths(tree))
+    flat = _flatten_with_paths(tree)
+
+    def write(tmp):
+        # np.savez appends ".npz" unless told not to — hand it an open
+        # file object so the temp name is used verbatim
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+    _atomic_write(path, write)
 
 
 def _set_nested(root, keys, value):
@@ -129,12 +165,11 @@ def save_protocol_state(path: str, params, opt_state, sync_state,
                     "inter": resolve_spec(tiers.inter).to_dict(),
                 },
             }, indent=1, sort_keys=True)
-        with open(path + ".spec.json", "w") as f:
-            f.write(blob)
+        _atomic_text(path + ".spec.json", blob)
     if counters is not None:
         import json
-        with open(path + ".counters.json", "w") as f:
-            json.dump(counters, f, indent=1, sort_keys=True)
+        _atomic_text(path + ".counters.json",
+                     json.dumps(counters, indent=1, sort_keys=True))
 
 
 def _sync_state(d):

@@ -547,6 +547,99 @@ class AsyncConfig:
 
 
 # ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+FAULT_BYZANTINE_MODES = ("sign_flip", "scale")
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """The fault-injection plane (``repro.network.faults``), threaded
+    through the engine like ``NetworkConfig``/``AsyncConfig``.
+
+    Attaching one to a ``DecentralizedLearner`` (directly or via
+    ``run_protocol_training(faults=...)``) injects faults INSIDE the
+    scanned round, every mask a pure function of ``(fault_seed, t)``:
+
+    * **crash/restart episodes** — time is cut into windows of
+      ``crash_every`` rounds; in each window a learner crashes with
+      probability ``crash_prob`` at a sampled offset for a sampled
+      ``outage_min..outage_max``-round outage. While crashed it neither
+      trains nor participates (the crash mask composes with the
+      availability mask); on restart it rejoins COLD — params, optimizer
+      state, and per-learner sync state (staleness counters, arrival
+      rings, health) are zeroed, modeling a node that lost local state.
+    * **payload corruption** — each round each learner's parameters go
+      non-finite with probability ``corrupt_prob`` (NaN on odd rounds,
+      Inf on even), the silent poison a plain ``mean`` spreads forever.
+    * **Byzantine adversaries** — a fixed ``byzantine_frac`` subset
+      (drawn once from ``fault_seed``) replaces its parameters every
+      round: ``sign_flip`` negates them, ``scale`` multiplies by
+      ``byzantine_scale``.
+    * **straggler bursts** — in each ``straggler_every``-round window,
+      with probability ``straggler_prob``, a random ``straggler_frac``
+      of the fleet goes dark for the window (AND-composed with the
+      availability mask like a crash, but without state loss).
+
+    ``faults=None`` leaves the engine bitwise-identical to the
+    fault-free path (no fault code is traced at all); a default
+    ``FaultConfig()`` has every fault disabled and produces bitwise
+    identical results through the traced fault ops. Defenses are
+    registered stages (``repro.core.sync.robust``): the
+    ``trimmed_mean``/``median`` aggregates, the ``quarantine`` commit,
+    the ``robust_periodic``/``robust_dynamic`` presets and the
+    ``hardened(spec)`` rewriter.
+    """
+    fault_seed: int = 0
+    crash_prob: float = 0.0       # per-learner per-window crash probability
+    crash_every: int = 16         # episode window length (rounds)
+    outage_min: int = 1           # shortest outage (rounds)
+    outage_max: int = 4           # longest outage (rounds)
+    corrupt_prob: float = 0.0     # per-learner per-round NaN/Inf corruption
+    byzantine_frac: float = 0.0   # fraction of the fleet that is adversarial
+    byzantine_mode: str = "sign_flip"   # sign_flip | scale
+    byzantine_scale: float = 10.0       # multiplier for mode="scale"
+    straggler_prob: float = 0.0   # per-window burst probability
+    straggler_every: int = 8      # burst window length (rounds)
+    straggler_frac: float = 0.5   # fraction straggling during a burst
+
+    def __post_init__(self):
+        for name in ("crash_prob", "corrupt_prob", "straggler_prob",
+                     "straggler_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(
+                    f"{name} is a probability/fraction, must be in "
+                    f"[0, 1]: got {v!r}")
+        if not 0.0 <= self.byzantine_frac < 1.0:
+            raise ValueError(
+                f"byzantine_frac must be in [0, 1) — a fully adversarial "
+                f"fleet has nothing to defend; got {self.byzantine_frac!r}")
+        if self.byzantine_mode not in FAULT_BYZANTINE_MODES:
+            raise KeyError(
+                f"unknown byzantine_mode {self.byzantine_mode!r}; "
+                f"known: {sorted(FAULT_BYZANTINE_MODES)}")
+        if self.crash_every < 1:
+            raise ValueError(
+                f"crash_every must be >= 1 round, got {self.crash_every!r}")
+        if self.straggler_every < 1:
+            raise ValueError(
+                f"straggler_every must be >= 1 round, "
+                f"got {self.straggler_every!r}")
+        if not 1 <= self.outage_min <= self.outage_max:
+            raise ValueError(
+                f"need 1 <= outage_min <= outage_max, got "
+                f"outage_min={self.outage_min!r}, "
+                f"outage_max={self.outage_max!r}")
+        if self.outage_max > self.crash_every:
+            raise ValueError(
+                f"outage_max ({self.outage_max}) must not exceed "
+                f"crash_every ({self.crash_every}) — a crash outliving its "
+                f"episode window is a permanent loss, not a restart")
+
+
+# ---------------------------------------------------------------------------
 # Telemetry
 # ---------------------------------------------------------------------------
 

@@ -48,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import (
-    AsyncConfig, NetworkConfig, ProtocolConfig, TelemetryConfig, TrainConfig,
+    AsyncConfig, FaultConfig, NetworkConfig, ProtocolConfig, TelemetryConfig,
+    TrainConfig,
 )
 from repro.core import operators as ops
 from repro.core import shard
@@ -60,8 +61,10 @@ from repro.core.sync.hierarchy import (
 from repro.core.sync.spec import resolve_spec
 from repro.network import availability as net_availability
 from repro.network import cost as net_cost
+from repro.network import faults as net_faults
 from repro.network import topology as net_topology
 from repro.optim import make_optimizer
+from repro.telemetry import sink
 
 
 class ProtocolMetrics(NamedTuple):
@@ -83,6 +86,14 @@ class ProtocolMetrics(NamedTuple):
     max_age: jnp.ndarray             # scalar int32 — the oldest
     #   rounds-since-sync counter the trigger carries (staleness/async
     #   age; 0 for stateless triggers)
+    num_faulty: jnp.ndarray          # scalar int32 — learners under ANY
+    #   injected fault this round (crashed/restarting/bursting/corrupted/
+    #   Byzantine; 0 with faults=None)
+    num_quarantined: jnp.ndarray     # scalar int32 — learners currently
+    #   quarantined (health counter > 0; 0 for non-robust triggers)
+    num_recovered: jnp.ndarray       # scalar int32 — learners whose
+    #   commit came back clean THIS round after a quarantine (0 for
+    #   non-robust triggers)
 
 
 class DecentralizedLearner:
@@ -107,6 +118,7 @@ class DecentralizedLearner:
         network: Optional[NetworkConfig] = None,
         telemetry: Optional[TelemetryConfig] = None,
         async_net: Optional[AsyncConfig] = None,
+        faults: Optional[FaultConfig] = None,
     ):
         self.m = m
         self.protocol = protocol
@@ -119,6 +131,11 @@ class DecentralizedLearner:
         self.opt = make_optimizer(train)
         self.track_divergence = track_divergence
         self.network = network
+        # fault-injection plane (repro.network.faults): gated STATICALLY
+        # on ``faults is not None`` — a fault-free run traces none of it
+        # and stays bitwise vs the fault-unaware engine
+        self.faults = faults
+        self._nonfinite_reported = False
         key = jax.random.PRNGKey(seed)
         k_init, k_noise, k_state = jax.random.split(key, 3)
 
@@ -301,6 +318,7 @@ class DecentralizedLearner:
         loss_fn, opt = self.loss_fn, self.opt
         weights = self.sample_weights
         spec = self.spec
+        faults = self.faults
         tiers = self.tiers
         track_div = self.track_divergence
         fleet = self.fleet
@@ -320,14 +338,48 @@ class DecentralizedLearner:
             return params, opt_state, loss
 
         def step(params, opt_state, sync_state, batches):
-            # availability means REACHABILITY: every learner still takes its
-            # local SGD step; unavailable ones just cannot communicate
-            params, opt_state, losses = jax.vmap(local_update)(
-                params, opt_state, batches)
             t = (sync_state.step if tiers is None
                  else sync_state.inter.step)          # this round's index
+            if faults is not None:
+                # fault plane, pure in (fault_seed, t) like availability.
+                # A learner REJOINING this round (crashed at t-1, up now)
+                # lost its local state: its params / optimizer / per-
+                # learner sync-state rows are zeroed — it rejoins COLD.
+                # (Hierarchy extra state is cluster-indexed, not learner-
+                # indexed, so it is left alone under tiers.)
+                crashed = net_faults.crash_mask(faults, m, t)
+                restart = net_faults.restart_mask(faults, m, t)
+                params = net_faults.lose_state(params, restart, m)
+                opt_state = net_faults.lose_state(opt_state, restart, m)
+                if tiers is None:
+                    sync_state = sync_state._replace(
+                        extra=net_faults.lose_state(
+                            sync_state.extra, restart, m))
+            # availability means REACHABILITY: every learner still takes its
+            # local SGD step; unavailable ones just cannot communicate
+            upd, opt_upd, losses = jax.vmap(local_update)(
+                params, opt_state, batches)
+            if faults is not None:
+                # a learner mid-outage is STATELESS, not just unreachable:
+                # its training freezes (the update is discarded) and it
+                # observes no loss this round
+                params = net_faults.freeze_state(upd, params, crashed, m)
+                opt_state = net_faults.freeze_state(
+                    opt_upd, opt_state, crashed, m)
+                losses = jnp.where(crashed, jnp.zeros_like(losses), losses)
+                # corrupted / Byzantine rows are perturbed IN the carry:
+                # the garbage is what the fleet syncs against, and it
+                # persists until a commit (or quarantine warm-start)
+                # overwrites the row
+                params = net_faults.perturb_params(faults, params, m, t)
+            else:
+                params, opt_state = upd, opt_upd
             active = (net_availability.sample(net, m, t)
                       if sample_masks else None)
+            if faults is not None:
+                # crashed + bursting learners drop out of the availability
+                # mask — the composition only ever REMOVES learners
+                active = net_faults.compose_active(faults, active, m, t)
             if tiers is None:
                 adj = (net_topology.adjacency(net, m, t) if mobile
                        else static_adj)
@@ -391,9 +443,18 @@ class DecentralizedLearner:
                 (k for k in ("age", "staleness") if k in extra), None)
             max_age = (jnp.max(extra[age_key]).astype(jnp.int32)
                        if age_key is not None else jnp.int32(0))
+            # fault/robustness observability — same static-key-membership
+            # pattern: fault-free runs of non-robust specs trade zero
+            # device work for the constant zeros
+            num_faulty = (net_faults.num_faulty(faults, m, t)
+                          if faults is not None else jnp.int32(0))
+            num_quar = (jnp.sum(extra["health"] > 0).astype(jnp.int32)
+                        if "health" in extra else jnp.int32(0))
+            num_rec = (jnp.sum(extra["recovered"]).astype(jnp.int32)
+                       if "recovered" in extra else jnp.int32(0))
             return params, opt_state, sync_state, ProtocolMetrics(
                 losses, rec, div, num_active, net_time, xfers, link_counts,
-                num_inflight, max_age)
+                num_inflight, max_age, num_faulty, num_quar, num_rec)
 
         return step
 
@@ -434,6 +495,8 @@ class DecentralizedLearner:
         the pre-telemetry fold."""
         fields = ops.CommRecord._fields
         carries_state = bool(self.spec.extra_state)
+        has_faults = self.faults is not None
+        carries_health = "health" in self.spec.extra_state
 
         def fold(metrics: ProtocolMetrics):
             if chunked:     # leaves carry a leading round axis: reduce it
@@ -477,6 +540,17 @@ class DecentralizedLearner:
                     out["per_round"]["num_inflight"] = lead(
                         metrics.num_inflight)
                     out["per_round"]["max_age"] = lead(metrics.max_age)
+                # fault-plane / robust-trigger series: key membership is
+                # static, so JSONL streams of fault-free runs of the
+                # non-robust presets stay byte-identical
+                if has_faults:
+                    out["per_round"]["num_faulty"] = lead(
+                        metrics.num_faulty)
+                if carries_health:
+                    out["per_round"]["num_quarantined"] = lead(
+                        metrics.num_quarantined)
+                    out["per_round"]["num_recovered"] = lead(
+                        metrics.num_recovered)
             return out
 
         return fold
@@ -501,6 +575,16 @@ class DecentralizedLearner:
             self.network_time += float(
                 np.cumsum(np.asarray(per["net_time"], np.float64))[-1])
         self.cumulative_loss_per_learner += host["loss_per_learner"]
+        if not self._nonfinite_reported:
+            bad = ~np.isfinite(self.cumulative_loss_per_learner)
+            if bad.any() or not np.isfinite(self.cumulative_loss):
+                # one-shot: the first fold where any loss counter goes
+                # non-finite names the offending learners, then stays
+                # quiet — a diverging fleet would otherwise flood
+                self._nonfinite_reported = True
+                sink.get_logger().event(
+                    "nonfinite_loss", round=self.rounds,
+                    learners=[int(i) for i in np.flatnonzero(bad)])
         for k in ops.CommRecord._fields:
             self.comm_totals[k] += int(host["comm"][k])
         self.active_rounds_total += int(host["num_active"])

@@ -20,6 +20,8 @@ from repro.core.sync import hierarchy, kernel, registry, spec, stages  # noqa: F
 from repro.core.sync import staleness  # noqa: F401  (registers "stale")
 from repro.core.sync import async_sync  # noqa: F401  (registers "aircomp",
 #                                  "async_periodic", "async_dynamic")
+from repro.core.sync import robust  # noqa: F401  (registers
+#                                  "robust_periodic", "robust_dynamic")
 from repro.core.sync.hierarchy import (  # noqa: F401
     HierResult, HierSyncState, apply_hierarchical, init_hier_state,
 )
@@ -32,5 +34,6 @@ from repro.core.sync.registry import (  # noqa: F401
     register_cohort, register_commit, register_trigger,
 )
 from repro.core.sync.async_sync import asyncify  # noqa: F401
+from repro.core.sync.robust import hardened  # noqa: F401
 from repro.core.sync.spec import ProtocolSpec, resolve_spec  # noqa: F401
 from repro.core.sync.staleness import BOUNDED_STALENESS  # noqa: F401

@@ -1,0 +1,221 @@
+"""The fault-injection plane, pure in ``(fault_seed, t)``.
+
+Every mask here is a pure function of the ``FaultConfig`` seed and the
+round counter — derived by folding ``t`` (or the episode window
+``t // window``) into a PRNG key, never by carried RNG state — so the
+whole plane evaluates inside ``lax.scan`` (``t`` may be traced) and any
+round's fault schedule is reconstructable in isolation, out of order,
+on the host. Four orthogonal fault kinds (see ``FaultConfig``):
+
+* **crash episodes** — ``crash_mask(cfg, m, t)``: within each
+  ``crash_every``-round window a learner crashes with probability
+  ``crash_prob`` at a sampled offset for a sampled duration. A crashed
+  learner is stateless: the engine forces it out of the availability
+  mask (``compose_active``) and freezes its local training.
+  ``restart_mask`` marks the rejoin round — crashed last round, up this
+  round — where the engine zeroes its params/optimizer/sync-state rows
+  (``lose_state``): it comes back COLD.
+* **payload corruption** — ``corrupt_mask`` + ``perturb_params``:
+  a corrupted learner's parameter row goes NaN (odd rounds) or Inf
+  (even rounds).
+* **Byzantine adversaries** — ``byzantine_mask`` (a fixed subset drawn
+  once from the seed) + ``perturb_params``: sign-flipped or scaled
+  parameter rows, every round.
+* **straggler bursts** — ``straggler_burst_mask``: whole windows where
+  a random fraction of the fleet goes dark, AND-composed with the
+  availability mask (no state loss).
+
+The engine gates on ``faults is not None`` statically, so a fault-free
+run traces none of this; a default ``FaultConfig()`` (all faults off)
+traces it but every mask is constant-False and every ``where`` selects
+the original value — bitwise identical results.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FaultConfig
+
+# per-fault-kind key-derivation constants (xor'd into the seed so the
+# streams never collide with each other or with availability's
+# 0xAC71/0x57AA/0x0F0F and aircomp's 0xA17C0)
+_KEY_CRASH = 0xC4A5
+_KEY_CRASH_AT = 0xC4A7
+_KEY_CRASH_LEN = 0xC4A9
+_KEY_CORRUPT = 0xC0DE
+_KEY_BYZ = 0xB42A
+_KEY_BURST = 0x5B57
+_KEY_BURST_WHO = 0x5B59
+
+
+def _win_key(seed: int, const: int, window) -> jax.Array:
+    return jax.random.fold_in(
+        jax.random.PRNGKey(seed ^ const), jnp.asarray(window, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# crash/restart episodes
+# ---------------------------------------------------------------------------
+
+def crash_mask(cfg: FaultConfig, m: int, t) -> jnp.ndarray:
+    """(m,) bool — learners mid-outage (crashed, stateless) at round
+    ``t``. Episode schedule per window ``w = t // crash_every``: learner
+    i crashes iff its window draw < ``crash_prob``, starting at a
+    uniform offset with a uniform ``outage_min..outage_max`` duration
+    (truncated at the window edge, so episodes never straddle windows
+    and the schedule stays a pure function of ``(fault_seed, t)``)."""
+    if cfg.crash_prob <= 0.0:
+        return jnp.zeros((m,), bool)
+    t = jnp.asarray(t, jnp.int32)
+    w = t // cfg.crash_every
+    phase = t % cfg.crash_every
+    crashing = jax.random.uniform(
+        _win_key(cfg.fault_seed, _KEY_CRASH, w), (m,)) < cfg.crash_prob
+    start = jax.random.randint(
+        _win_key(cfg.fault_seed, _KEY_CRASH_AT, w), (m,),
+        0, cfg.crash_every)
+    dur = jax.random.randint(
+        _win_key(cfg.fault_seed, _KEY_CRASH_LEN, w), (m,),
+        cfg.outage_min, cfg.outage_max + 1)
+    return crashing & (phase >= start) & (phase < start + dur)
+
+
+def restart_mask(cfg: FaultConfig, m: int, t) -> jnp.ndarray:
+    """(m,) bool — learners REJOINING at round ``t``: crashed during
+    round ``t - 1``, up again this round. The engine zeroes their local
+    state on this round (``lose_state``) before they rejoin."""
+    if cfg.crash_prob <= 0.0:
+        return jnp.zeros((m,), bool)
+    t = jnp.asarray(t, jnp.int32)
+    prev = crash_mask(cfg, m, jnp.maximum(t - 1, 0))
+    return prev & ~crash_mask(cfg, m, t) & (t > 0)
+
+
+# ---------------------------------------------------------------------------
+# straggler bursts
+# ---------------------------------------------------------------------------
+
+def straggler_burst_mask(cfg: FaultConfig, m: int, t) -> jnp.ndarray:
+    """(m,) bool — learners dark for this burst window. In window
+    ``w = t // straggler_every`` a burst fires with probability
+    ``straggler_prob``; during a burst each learner straggles with
+    probability ``straggler_frac`` (drawn per window)."""
+    if cfg.straggler_prob <= 0.0 or cfg.straggler_frac <= 0.0:
+        return jnp.zeros((m,), bool)
+    t = jnp.asarray(t, jnp.int32)
+    w = t // cfg.straggler_every
+    burst = jax.random.uniform(
+        _win_key(cfg.fault_seed, _KEY_BURST, w), ()) < cfg.straggler_prob
+    who = jax.random.uniform(
+        _win_key(cfg.fault_seed, _KEY_BURST_WHO, w),
+        (m,)) < cfg.straggler_frac
+    return burst & who
+
+
+def compose_active(cfg: FaultConfig, active, m: int, t) -> jnp.ndarray:
+    """AND the fault plane into the availability mask: crashed and
+    bursting learners are unreachable. The composition can only REMOVE
+    learners, so a crashed (stateless) learner is never active. With
+    crashes and bursts statically off the mask passes through UNTOUCHED
+    (``None`` stays ``None``), so an inert config keeps the engine on
+    the ideal-network expressions — bitwise vs ``faults=None``."""
+    if cfg.crash_prob <= 0.0 and (
+            cfg.straggler_prob <= 0.0 or cfg.straggler_frac <= 0.0):
+        return active
+    down = crash_mask(cfg, m, t) | straggler_burst_mask(cfg, m, t)
+    if active is None:
+        return ~down
+    return active & ~down
+
+
+# ---------------------------------------------------------------------------
+# payload corruption + Byzantine adversaries
+# ---------------------------------------------------------------------------
+
+def corrupt_mask(cfg: FaultConfig, m: int, t) -> jnp.ndarray:
+    """(m,) bool — learners whose parameters go non-finite this round."""
+    if cfg.corrupt_prob <= 0.0:
+        return jnp.zeros((m,), bool)
+    key = jax.random.fold_in(
+        jax.random.PRNGKey(cfg.fault_seed ^ _KEY_CORRUPT),
+        jnp.asarray(t, jnp.int32))
+    return jax.random.uniform(key, (m,)) < cfg.corrupt_prob
+
+
+def byzantine_mask(cfg: FaultConfig, m: int) -> jnp.ndarray:
+    """(m,) bool — the FIXED adversary subset, drawn once from the
+    seed (round-independent: an adversary is an adversary all run)."""
+    n_adv = int(round(cfg.byzantine_frac * m))
+    if n_adv == 0:
+        return jnp.zeros((m,), bool)
+    perm = jax.random.permutation(
+        jax.random.PRNGKey(cfg.fault_seed ^ _KEY_BYZ), m)
+    return jnp.zeros((m,), bool).at[perm[:n_adv]].set(True)
+
+
+def _row_select(rows: jnp.ndarray, bad, x: jnp.ndarray) -> jnp.ndarray:
+    """``where`` over a learner-stacked leaf: row i <- bad_i if rows[i].
+    Selection (not arithmetic), so untouched rows stay bitwise."""
+    r = rows.reshape((rows.shape[0],) + (1,) * (x.ndim - 1))
+    return jnp.where(r, bad, x)
+
+
+def perturb_params(cfg: FaultConfig, params, m: int, t):
+    """Apply corruption + Byzantine perturbation to the learner-stacked
+    parameter pytree. Rows of honest, uncorrupted learners pass through
+    a ``where`` select — bitwise untouched."""
+    corrupt = corrupt_mask(cfg, m, t)
+    byz = byzantine_mask(cfg, m)
+    any_corrupt = cfg.corrupt_prob > 0.0
+    any_byz = int(round(cfg.byzantine_frac * m)) > 0
+    if not (any_corrupt or any_byz):
+        return params
+    t = jnp.asarray(t, jnp.int32)
+
+    def leaf(x):
+        if any_byz:
+            if cfg.byzantine_mode == "sign_flip":
+                x = _row_select(byz, -x, x)
+            else:
+                x = _row_select(byz, jnp.asarray(
+                    cfg.byzantine_scale, x.dtype) * x, x)
+        if any_corrupt:
+            poison = jnp.where(t % 2 == 1,
+                               jnp.asarray(jnp.nan, x.dtype),
+                               jnp.asarray(jnp.inf, x.dtype))
+            x = _row_select(corrupt, poison, x)
+        return x
+
+    return jax.tree.map(leaf, params)
+
+
+def freeze_state(tree_new, tree_old, rows: jnp.ndarray, m: int):
+    """Discard the update of the marked learner rows: leaves with a
+    leading fleet axis keep their OLD row where ``rows[i]`` (a crashed
+    learner does not train); other leaves take the new value."""
+    def leaf(n, o):
+        if jnp.ndim(n) >= 1 and n.shape[0] == m:
+            return _row_select(rows, o, n)
+        return n
+    return jax.tree.map(leaf, tree_new, tree_old)
+
+
+def lose_state(tree, rows: jnp.ndarray, m: int):
+    """Zero the learner rows of every learner-stacked leaf (leading dim
+    ``m``): the restart state loss. Leaves without a leading fleet axis
+    (a replicated scalar an optimizer carries) pass through untouched."""
+    def leaf(x):
+        if jnp.ndim(x) >= 1 and x.shape[0] == m:
+            return _row_select(rows, jnp.zeros_like(x), x)
+        return x
+    return jax.tree.map(leaf, tree)
+
+
+def num_faulty(cfg: FaultConfig, m: int, t) -> jnp.ndarray:
+    """Scalar int32 — learners under ANY fault this round (crashed,
+    restarting, bursting, corrupted, or Byzantine)."""
+    any_fault = (crash_mask(cfg, m, t) | restart_mask(cfg, m, t)
+                 | straggler_burst_mask(cfg, m, t)
+                 | corrupt_mask(cfg, m, t) | byzantine_mask(cfg, m))
+    return jnp.sum(any_fault).astype(jnp.int32)

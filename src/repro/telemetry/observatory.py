@@ -236,6 +236,28 @@ def summarize(run: Run, points: int = 50) -> Dict[str, Any]:
              for r in rounds], points)
         out["inflight_last"] = last.get("inflight") or 0
         out["max_age_last"] = last.get("max_age") or 0
+    # fault card: present only when the stream was written under a
+    # FaultConfig and/or a robust (health-carrying) protocol
+    has_faults = any(r.get("num_faulty") is not None for r in rounds)
+    has_health = any(r.get("num_quarantined") is not None for r in rounds)
+    if has_faults or has_health:
+        card: Dict[str, Any] = {}
+        if has_faults:
+            card["faulty_rounds"] = sum(
+                1 for r in rounds if r.get("num_faulty"))
+            card["max_faulty"] = max(
+                r.get("num_faulty") or 0 for r in rounds)
+            card["faulty"] = _downsample(
+                [[r["round"], r.get("num_faulty") or 0] for r in rounds],
+                points)
+        if has_health:
+            card["total_recovered"] = sum(
+                r.get("num_recovered") or 0 for r in rounds)
+            card["quarantined_last"] = last.get("num_quarantined") or 0
+            card["quarantine"] = _downsample(
+                [[r["round"], r.get("num_quarantined") or 0,
+                  r.get("num_recovered") or 0] for r in rounds], points)
+        out["faults"] = card
     walls = [c["wall_s"] for c in run.chunks if "wall_s" in c]
     if walls:
         out["profile"] = {

@@ -82,7 +82,11 @@ class RoundRecord:
     share under a hierarchy. ``inflight``/``max_age`` are written only by
     state-carrying protocols (async timeline / bounded staleness): the
     number of learners with a message still in flight after the round and
-    the oldest rounds-since-sync counter."""
+    the oldest rounds-since-sync counter. ``num_faulty`` is written only
+    under a ``FaultConfig`` (learners under any injected fault this
+    round); ``num_quarantined``/``num_recovered`` only by robust
+    protocols carrying health counters (learners currently quarantined /
+    recovering this round)."""
     round: int              # 1-based global round index
     loss: float             # fleet loss this round (sum over learners)
     cum_loss: float
@@ -102,6 +106,9 @@ class RoundRecord:
     uplink_bytes: Optional[int] = None             # hierarchy uplink share
     inflight: Optional[int] = None                 # learners in flight
     max_age: Optional[int] = None                  # oldest sync-age counter
+    num_faulty: Optional[int] = None               # learners under a fault
+    num_quarantined: Optional[int] = None          # quarantined learners
+    num_recovered: Optional[int] = None            # recoveries this round
 
     _INT_FIELDS = ("round", "messages", "cohort", "sync", "full_sync",
                    "cum_syncs", "num_active", "round_bytes", "cum_bytes")
@@ -123,6 +130,10 @@ class RoundRecord:
             d["inflight"] = int(self.inflight)
         if self.max_age is not None:
             d["max_age"] = int(self.max_age)
+        for f in ("num_faulty", "num_quarantined", "num_recovered"):
+            val = getattr(self, f)
+            if val is not None:
+                d[f] = int(val)
         return d
 
     @classmethod
@@ -148,6 +159,9 @@ class RoundRecord:
             kw["inflight"] = _as_int(d, "inflight")
         if d.get("max_age") is not None:
             kw["max_age"] = _as_int(d, "max_age")
+        for f in ("num_faulty", "num_quarantined", "num_recovered"):
+            if d.get(f) is not None:
+                kw[f] = _as_int(d, f)
         known = {f.name for f in fields(cls)}
         unknown = sorted(set(d) - known - {"kind"})
         if unknown:

@@ -126,6 +126,15 @@ class RoundRecorder:
                     if "num_inflight" in per else None)
         max_age = (np.asarray(per["max_age"], np.int64)
                    if "max_age" in per else None)
+        # fault plane / robust protocols only: per-round fault and
+        # quarantine counts (key membership mirrors the engine's static
+        # gating, so fault-free streams carry no extra fields)
+        faulty = (np.asarray(per["num_faulty"], np.int64)
+                  if "num_faulty" in per else None)
+        quar = (np.asarray(per["num_quarantined"], np.int64)
+                if "num_quarantined" in per else None)
+        rec = (np.asarray(per["num_recovered"], np.int64)
+               if "num_recovered" in per else None)
 
         if self.hierarchical:
             round_bytes = link_bytes.sum(axis=1)
@@ -168,6 +177,9 @@ class RoundRecorder:
                 link_bytes=lb, uplink_bytes=uplink,
                 inflight=None if inflight is None else int(inflight[t]),
                 max_age=None if max_age is None else int(max_age[t]),
+                num_faulty=None if faulty is None else int(faulty[t]),
+                num_quarantined=None if quar is None else int(quar[t]),
+                num_recovered=None if rec is None else int(rec[t]),
             ).to_dict())
 
         self._chunks += 1

@@ -18,7 +18,9 @@ from typing import Callable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import AsyncConfig, NetworkConfig, TelemetryConfig, TrainConfig
+from repro.config import (
+    AsyncConfig, FaultConfig, NetworkConfig, TelemetryConfig, TrainConfig,
+)
 from repro.core import operators as ops
 from repro.core.protocol import DecentralizedLearner
 from repro.data.pipeline import LearnerStreams
@@ -98,6 +100,7 @@ def run_protocol_training(
     network: Optional[NetworkConfig] = None,
     telemetry: Optional[TelemetryConfig] = None,
     async_net: Optional[AsyncConfig] = None,
+    faults: Optional[FaultConfig] = None,
 ) -> tuple:
     """Returns (learner, trajectory). A ``telemetry`` config attaches
     the fleet telemetry plane (``repro.telemetry``): one schema'd record
@@ -109,7 +112,7 @@ def run_protocol_training(
         loss_fn, init_fn, m, protocol, train, seed=seed,
         init_heterogeneity=init_heterogeneity,
         sample_weights=streams.weights, network=network,
-        telemetry=telemetry, async_net=async_net)
+        telemetry=telemetry, async_net=async_net, faults=faults)
     traj = Trajectory()
     chunk = max(1, min(chunk_size, rounds))
     t = 0

@@ -1,0 +1,615 @@
+"""Fault-tolerant fleet (ISSUE 10).
+
+Claims pinned here:
+
+* **purity** — every fault mask is a pure function of ``(fault_seed, t)``:
+  reconstructable out of order, stable across evaluations, and a crash
+  episode's restart round follows directly from the mask (the hypothesis
+  properties).
+* **inertness** — ``faults=None`` and a default ``FaultConfig()`` (all
+  faults off) are BITWISE identical across every preset and layout:
+  comm counters, per-link ledger, net-time, parameter bytes, and the
+  telemetry JSONL of ``faults=None`` carries no fault fields at all.
+* **defenses** — the ``trimmed_mean``/``median`` aggregates exclude
+  non-finite values per coordinate; the ``quarantine`` commit heals
+  suspect rows from the reference and the health counters reset exactly
+  on the recovery commit; on an HONEST fleet the robust pipeline's comm
+  counters stay bitwise vs the plain one and ``trim_frac=0`` reproduces
+  the mean to reassociation tolerance.
+* **engine** — under heavy injected faults the robust presets keep every
+  reachable honest row finite while the plain mean pipeline is poisoned;
+  the one-shot ``nonfinite_loss`` event names the offending learners.
+* **checkpoints** — a crash mid-save leaves the previous complete
+  checkpoint on disk (atomic ``os.replace`` writes), never a truncated
+  file.
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (
+    load_counters, load_protocol_spec, load_protocol_state,
+    save_protocol_state,
+)
+from repro.config import FaultConfig, NetworkConfig, TelemetryConfig
+from repro.core.protocol import DecentralizedLearner
+from repro.core.sync import PROTOCOLS, apply_staged, init_state
+from repro.core.sync.robust import (
+    flat_median, flat_trimmed_mean, hardened,
+)
+from repro.network import faults as nf
+from repro.telemetry.sink import get_logger
+
+from hypothesis_compat import given, settings, st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N_DEV = jax.device_count()
+multi_device = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >= 2 devices (run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+# ---------------------------------------------------------------------------
+# tiny deterministic fleet (the test_async idiom)
+# ---------------------------------------------------------------------------
+
+def _loss(p, batch):
+    x, y = batch
+    return jnp.mean((x @ p["w"] - y) ** 2)
+
+
+def _init(key):
+    return {"w": jax.random.normal(key, (4,)) * 0.1}
+
+
+def _batches(m, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (n, m, 8, 4))
+    ys = jnp.sum(xs, axis=-1) * 0.5
+    return (xs, ys)
+
+
+def _digest(params) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def _fingerprint(spec, *, network=None, faults=None, m=4, rounds=8,
+                 seed=0, telemetry=None):
+    dl = DecentralizedLearner(_loss, _init, m, spec, seed=seed,
+                              network=network, faults=faults,
+                              telemetry=telemetry)
+    metrics = dl.run_chunk(_batches(m, rounds, seed))
+    return dl, metrics, (dict(dl.comm_totals),
+                         np.asarray(dl.link_bytes_totals).tolist(),
+                         float(dl.network_time), _digest(dl.params))
+
+
+BASE_SPECS = {
+    "periodic": PROTOCOLS["periodic"].with_params(b=2),
+    "continuous": PROTOCOLS["continuous"],
+    "fedavg": PROTOCOLS["fedavg"].with_params(b=2),
+    "gossip": PROTOCOLS["gossip"].with_params(b=2),
+    "dynamic": PROTOCOLS["dynamic"].with_params(b=1, delta=0.05),
+    "nosync": PROTOCOLS["nosync"],
+    "stale": PROTOCOLS["stale"].with_params(tau=3),
+    "robust_periodic": PROTOCOLS["robust_periodic"].with_params(b=2),
+    "robust_dynamic": PROTOCOLS["robust_dynamic"].with_params(
+        b=1, delta=0.05),
+}
+
+# heavy everything: crashes, corruption, adversaries, bursts
+HEAVY = FaultConfig(fault_seed=7, crash_prob=0.3, byzantine_frac=0.25,
+                    corrupt_prob=0.05, straggler_prob=0.3)
+
+
+# ---------------------------------------------------------------------------
+# the fault plane is pure in (fault_seed, t)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), t=st.integers(0, 200),
+       m=st.integers(1, 12))
+def test_crash_schedule_pure_in_seed_and_t(seed, t, m):
+    cfg = FaultConfig(fault_seed=seed, crash_prob=0.4, crash_every=8,
+                      outage_min=1, outage_max=4)
+    a = np.asarray(nf.crash_mask(cfg, m, t))
+    b = np.asarray(nf.crash_mask(cfg, m, t))      # out-of-order re-eval
+    assert (a == b).all()
+    # the restart round follows from the mask alone: crashed at t-1,
+    # up at t
+    r = np.asarray(nf.restart_mask(cfg, m, t))
+    if t > 0:
+        prev = np.asarray(nf.crash_mask(cfg, m, t - 1))
+        assert (r == (prev & ~a)).all()
+    else:
+        assert not r.any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), t=st.integers(0, 200),
+       act_seed=st.integers(0, 2**16))
+def test_crashed_learner_is_never_active(seed, t, act_seed):
+    """crash ∧ availability never yields an active-but-stateless
+    learner: the composition only removes."""
+    m = 8
+    cfg = FaultConfig(fault_seed=seed, crash_prob=0.5, straggler_prob=0.4,
+                      straggler_frac=0.5)
+    key = jax.random.fold_in(jax.random.PRNGKey(act_seed), t)
+    avail = jax.random.uniform(key, (m,)) < 0.7
+    active = np.asarray(nf.compose_active(cfg, avail, m, t))
+    crashed = np.asarray(nf.crash_mask(cfg, m, t))
+    burst = np.asarray(nf.straggler_burst_mask(cfg, m, t))
+    assert not (active & crashed).any()
+    assert not (active & burst).any()
+    assert (active <= np.asarray(avail)).all()    # only ever removes
+
+
+def test_byzantine_subset_is_fixed_and_sized():
+    cfg = FaultConfig(fault_seed=3, byzantine_frac=0.25)
+    a = np.asarray(nf.byzantine_mask(cfg, 8))
+    assert a.sum() == 2
+    assert (a == np.asarray(nf.byzantine_mask(cfg, 8))).all()
+    assert not np.asarray(nf.byzantine_mask(FaultConfig(), 8)).any()
+
+
+def test_perturb_modes_touch_only_marked_rows():
+    cfg = FaultConfig(fault_seed=3, byzantine_frac=0.25,
+                      byzantine_mode="sign_flip")
+    byz = np.asarray(nf.byzantine_mask(cfg, 8))
+    p = {"w": jnp.ones((8, 4))}
+    out = np.asarray(nf.perturb_params(cfg, p, 8, 0)["w"])
+    assert (out[byz] == -1.0).all() and (out[~byz] == 1.0).all()
+    cfg = FaultConfig(fault_seed=3, byzantine_frac=0.25,
+                      byzantine_mode="scale", byzantine_scale=10.0)
+    out = np.asarray(nf.perturb_params(cfg, p, 8, 0)["w"])
+    assert (out[byz] == 10.0).all() and (out[~byz] == 1.0).all()
+    # corruption alternates Inf (even t) / NaN (odd t)
+    cfg = FaultConfig(fault_seed=0, corrupt_prob=1.0)
+    even = np.asarray(nf.perturb_params(cfg, p, 8, 0)["w"])
+    odd = np.asarray(nf.perturb_params(cfg, p, 8, 1)["w"])
+    assert np.isinf(even).all() and np.isnan(odd).all()
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError, match="crash_prob"):
+        FaultConfig(crash_prob=1.5)
+    with pytest.raises(KeyError, match="byzantine_mode"):
+        FaultConfig(byzantine_mode="gaslight")
+    with pytest.raises(ValueError, match="outage"):
+        FaultConfig(outage_min=5, outage_max=2)
+
+
+# ---------------------------------------------------------------------------
+# inertness: FaultConfig() == faults=None, bitwise
+# ---------------------------------------------------------------------------
+
+def test_inert_faultconfig_is_bitwise_noop():
+    net = NetworkConfig(link_classes=("wired", "wifi"), act_prob=0.8,
+                        seed=3)
+    for name, spec in BASE_SPECS.items():
+        for layout in ("tree", "flat"):
+            s = spec.with_params(layout=layout)
+            _, _, none_fp = _fingerprint(s, network=net)
+            _, _, inert_fp = _fingerprint(s, network=net,
+                                          faults=FaultConfig())
+            assert inert_fp == none_fp, (name, layout)
+
+
+def test_inert_faultconfig_ideal_network_bitwise():
+    """No network: active stays None, so the inert config must keep the
+    engine on the IDEAL expressions (compose_active passes None
+    through)."""
+    for name in ("periodic", "dynamic", "robust_dynamic"):
+        _, _, none_fp = _fingerprint(BASE_SPECS[name])
+        _, _, inert_fp = _fingerprint(BASE_SPECS[name],
+                                      faults=FaultConfig())
+        assert inert_fp == none_fp, name
+
+
+@multi_device
+def test_inert_faultconfig_sharded_bitwise():
+    net = NetworkConfig(link_classes=("wired",), act_prob=0.8, seed=3)
+    for name in ("periodic", "dynamic", "robust_periodic",
+                 "robust_dynamic"):
+        s = BASE_SPECS[name].with_params(layout="sharded")
+        _, _, none_fp = _fingerprint(s, network=net, m=N_DEV)
+        _, _, inert_fp = _fingerprint(s, network=net, m=N_DEV,
+                                      faults=FaultConfig())
+        assert inert_fp == none_fp, name
+
+
+def test_none_faults_stream_has_no_fault_fields(tmp_path):
+    """The faults=None JSONL carries no fault keys (static gating keeps
+    old streams byte-compatible); a faulty robust run carries all three
+    and two identical runs stream identical bytes."""
+    a = str(tmp_path / "clean.jsonl")
+    dl, _, _ = _fingerprint(BASE_SPECS["dynamic"],
+                            telemetry=TelemetryConfig(path=a))
+    dl.recorder.close()
+    with open(a) as f:
+        recs = [json.loads(ln) for ln in f]
+    for r in recs:
+        if r["kind"] == "round":
+            assert "num_faulty" not in r
+            assert "num_quarantined" not in r
+
+    def faulty(path):
+        dl, _, _ = _fingerprint(
+            BASE_SPECS["robust_dynamic"], faults=HEAVY,
+            telemetry=TelemetryConfig(path=path))
+        dl.recorder.close()
+
+    b, c = str(tmp_path / "b.jsonl"), str(tmp_path / "c.jsonl")
+    faulty(b)
+    faulty(c)
+    with open(b, "rb") as fb, open(c, "rb") as fc:
+        assert fb.read() == fc.read()             # pure in (seed, t)
+    with open(b) as f:
+        rounds = [json.loads(ln) for ln in f
+                  if json.loads(ln)["kind"] == "round"]
+    assert all("num_faulty" in r and "num_quarantined" in r
+               and "num_recovered" in r for r in rounds)
+    assert any(r["num_faulty"] > 0 for r in rounds)
+
+
+# ---------------------------------------------------------------------------
+# robust aggregates: order statistics vs numpy
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_and_median_match_numpy():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(7, 5)).astype(np.float32)
+    X[2, 1] = np.nan
+    X[5, 3] = np.inf
+    mask = np.array([1, 1, 1, 0, 1, 1, 1], bool)
+    got_med = np.asarray(flat_median(jnp.asarray(X), jnp.asarray(mask)))
+    got_tm = np.asarray(flat_trimmed_mean(jnp.asarray(X),
+                                          jnp.asarray(mask), 0.2))
+    for j in range(5):
+        col = X[mask, j]
+        col = col[np.isfinite(col)]
+        assert got_med[j] == pytest.approx(np.median(col), abs=1e-6), j
+        k = int(np.floor(0.2 * len(col)))
+        kept = np.sort(col)[k:len(col) - k] if len(col) > 2 * k else col
+        assert got_tm[j] == pytest.approx(kept.mean(), abs=1e-6), j
+    # empty coordinate -> 0, not NaN
+    none = flat_median(jnp.full((3, 2), jnp.nan),
+                       jnp.ones((3,), bool))
+    assert (np.asarray(none) == 0.0).all()
+
+
+def test_trim_frac_zero_reproduces_mean():
+    """trim_frac=0 on an honest fleet is the plain mean to
+    reassociation tolerance (the sum runs in sorted order)."""
+    plain = PROTOCOLS["periodic"].with_params(b=2)
+    robust = PROTOCOLS["robust_periodic"].with_params(b=2, trim_frac=0.0)
+    a, _, _ = _fingerprint(plain, rounds=8)
+    b, _, _ = _fingerprint(robust, rounds=8)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_honest_fleet_comm_counters_bitwise_vs_plain():
+    """The quarantine ledger is expression-identical to commit_average:
+    on an honest fleet every comm counter matches the plain pipeline
+    bitwise, with and without availability masks."""
+    net = NetworkConfig(link_classes=("wired", "wifi"), act_prob=0.7,
+                        seed=5)
+    for network in (None, net):
+        a, am, _ = _fingerprint(PROTOCOLS["periodic"].with_params(b=2),
+                                network=network)
+        b, bm, _ = _fingerprint(
+            PROTOCOLS["robust_periodic"].with_params(b=2),
+            network=network)
+        assert a.comm_totals == b.comm_totals
+        assert a.link_xfer_totals.tolist() == b.link_xfer_totals.tolist()
+        assert np.asarray(a.link_bytes_totals).tolist() == \
+            np.asarray(b.link_bytes_totals).tolist()
+        assert float(a.network_time) == float(b.network_time)
+
+
+def test_robust_validation():
+    with pytest.raises(ValueError, match="trim_frac"):
+        PROTOCOLS["robust_periodic"].with_params(trim_frac=0.5)
+    with pytest.raises(ValueError, match="quarantine_mult"):
+        PROTOCOLS["robust_periodic"].with_params(quarantine_mult=1.0)
+
+
+# ---------------------------------------------------------------------------
+# quarantine + health counters at the stage level
+# ---------------------------------------------------------------------------
+
+def _stage_fleet(m=6, d=4, bad_rows=(), byz_rows=()):
+    ref = {"w": jnp.ones((d,))}
+    stacked = jnp.broadcast_to(ref["w"], (m, d)) + 0.01
+    for r in bad_rows:
+        stacked = stacked.at[r].set(jnp.nan)
+    for r in byz_rows:
+        stacked = stacked.at[r].set(-5.0)
+    return ref, {"w": stacked}
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+def test_quarantine_heals_and_health_counts(layout):
+    spec = PROTOCOLS["robust_periodic"].with_params(b=1, layout=layout)
+    m = 6
+    ref, stacked = _stage_fleet(m, bad_rows=(1,), byz_rows=(4,))
+    state = init_state(ref, 0, spec=spec, m=m)
+    res = apply_staged(spec, stacked, state)
+    w = np.asarray(res.params["w"])
+    assert np.isfinite(w).all()
+    # suspect rows got the REFERENCE, not the aggregate
+    assert (w[1] == np.asarray(ref["w"])).all()
+    assert (w[4] == np.asarray(ref["w"])).all()
+    assert np.asarray(res.state.extra["health"]).tolist() == [
+        0, 1, 0, 0, 1, 0]
+    assert np.asarray(res.state.extra["recovered"]).tolist() == [0] * m
+    # next commit: the healed rows have caught up with the fleet (in the
+    # engine a local-training step moves them off the stale warm-start
+    # point) and come back clean -> recovery flags, health resets exactly
+    caught_up = {"w": jnp.broadcast_to(res.state.ref["w"], (m, 4)) + 0.01}
+    res2 = apply_staged(spec, caught_up, res.state)
+    assert np.asarray(res2.state.extra["health"]).tolist() == [0] * m
+    assert np.asarray(res2.state.extra["recovered"]).tolist() == [
+        0, 1, 0, 0, 1, 0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(bad=st.sets(st.integers(0, 5), max_size=2))
+def test_health_resets_exactly_on_recovery_commit(bad):
+    """For any minority set of NaN rows: one commit quarantines exactly
+    that set, the next (clean) commit flags exactly that set as
+    recovered and zeroes every counter."""
+    spec = PROTOCOLS["robust_periodic"].with_params(b=1)
+    m = 6
+    ref, stacked = _stage_fleet(m, bad_rows=tuple(bad))
+    state = init_state(ref, 0, spec=spec, m=m)
+    res = apply_staged(spec, stacked, state)
+    want = [1 if i in bad else 0 for i in range(m)]
+    assert np.asarray(res.state.extra["health"]).tolist() == want
+    caught_up = {"w": jnp.broadcast_to(res.state.ref["w"], (m, 4)) + 0.01}
+    res2 = apply_staged(spec, caught_up, res.state)
+    assert np.asarray(res2.state.extra["health"]).tolist() == [0] * m
+    assert np.asarray(res2.state.extra["recovered"]).tolist() == want
+
+
+def test_skip_rounds_keep_health_and_clear_recovered():
+    spec = PROTOCOLS["robust_periodic"].with_params(b=4)
+    m = 6
+    ref, stacked = _stage_fleet(m, bad_rows=(2,))
+    state = init_state(ref, 0, spec=spec, m=m)
+    res = apply_staged(spec, stacked, state)      # t=1: gate closed
+    assert int(np.asarray(res.rec.syncs)) == 0
+    assert np.asarray(res.state.extra["health"]).tolist() == [0] * m
+
+
+def test_robust_divergence_fires_on_nan_row():
+    """The finite guard: a NaN row never exceeds delta numerically, but
+    it must still pull the fleet into the healing sync."""
+    spec = PROTOCOLS["robust_dynamic"].with_params(b=1, delta=1e9)
+    m = 6
+    ref, stacked = _stage_fleet(m, bad_rows=(2,))
+    state = init_state(ref, 0, spec=spec, m=m)
+    res = apply_staged(spec, stacked, state)
+    assert int(np.asarray(res.rec.syncs)) == 1
+    assert np.isfinite(np.asarray(res.params["w"])).all()
+    # honest fleet at the same huge delta: nothing fires
+    _, honest = _stage_fleet(m)
+    res = apply_staged(spec, honest, init_state(ref, 0, spec=spec, m=m))
+    assert int(np.asarray(res.rec.syncs)) == 0
+
+
+# ---------------------------------------------------------------------------
+# hardened(): the robust rewriter
+# ---------------------------------------------------------------------------
+
+def test_hardened_rewrites_and_preserves_params():
+    sp = hardened(PROTOCOLS["periodic"].with_params(b=3))
+    assert sp.trigger == "robust_cadence"
+    assert sp.aggregate == "trimmed_mean" and sp.commit == "quarantine"
+    assert sp.param("b") == 3
+    sp = hardened(sp)                              # idempotent
+    assert sp.trigger == "robust_cadence"
+    sp = hardened(PROTOCOLS["periodic"], aggregate="median",
+                  quarantine_mult=9.0)
+    assert sp.aggregate == "median"
+    assert sp.param("quarantine_mult") == 9.0
+    sp = hardened(PROTOCOLS["periodic"], trim_frac=0.3)
+    assert sp.aggregate == "trimmed_mean"
+    assert sp.param("trim_frac") == 0.3
+
+
+def test_hardened_rejects_unrewritable_compositions():
+    with pytest.raises(ValueError, match="robust_dynamic"):
+        hardened(PROTOCOLS["dynamic"])             # balancing commit
+    with pytest.raises(ValueError, match="trigger"):
+        hardened(PROTOCOLS["stale"])
+    with pytest.raises(ValueError, match="aggregate"):
+        hardened(PROTOCOLS["periodic"], aggregate="mean")
+
+
+# ---------------------------------------------------------------------------
+# the engine under heavy faults
+# ---------------------------------------------------------------------------
+
+def test_robust_presets_survive_heavy_faults():
+    m = 8
+    byz = np.asarray(nf.byzantine_mask(HEAVY, m))
+    for name in ("robust_periodic", "robust_dynamic"):
+        dl, metrics, _ = _fingerprint(BASE_SPECS[name], faults=HEAVY,
+                                      m=m, rounds=24)
+        t_last = 23
+        reach = np.asarray(nf.compose_active(HEAVY, None, m, t_last))
+        corrupt = np.asarray(nf.corrupt_mask(HEAVY, m, t_last))
+        ok = reach & ~byz & ~corrupt
+        w = np.asarray(jax.device_get(dl.params["w"]))
+        assert np.isfinite(w[ok]).all(), name
+        assert np.isfinite(
+            np.asarray(jax.device_get(dl.sync_state.ref["w"]))).all()
+        # the per-round fault metrics see the injections
+        assert int(np.asarray(metrics.num_faulty).sum()) > 0
+        assert int(np.asarray(metrics.num_quarantined).max()) > 0
+
+
+def test_plain_mean_is_poisoned_by_corruption():
+    dl, _, _ = _fingerprint(BASE_SPECS["dynamic"],
+                            faults=FaultConfig(fault_seed=7,
+                                               corrupt_prob=0.2),
+                            rounds=16)
+    assert not np.isfinite(dl.cumulative_loss_per_learner).all()
+
+
+def test_crash_freezes_training_and_restarts_cold():
+    """A crashed learner observes zero loss; the restart round zeroes
+    its carried rows before the local step."""
+    m = 4
+    cfg = FaultConfig(fault_seed=1, crash_prob=0.9, crash_every=8,
+                      outage_min=2, outage_max=4)
+    dl, metrics, _ = _fingerprint(PROTOCOLS["nosync"], faults=cfg,
+                                  m=m, rounds=8)
+    losses = np.asarray(metrics.loss_per_learner)          # (n, m)
+    for t in range(8):
+        crashed = np.asarray(nf.crash_mask(cfg, m, t))
+        assert (losses[t][crashed] == 0.0).all(), t
+
+
+def test_nonfinite_loss_event_fires_once_with_learners(tmp_path):
+    events = []
+    log = get_logger()
+    handler = log.add_handler(events.append)
+    try:
+        dl, _, _ = _fingerprint(
+            BASE_SPECS["dynamic"],
+            faults=FaultConfig(fault_seed=7, corrupt_prob=0.3),
+            rounds=16)
+        hits = [e for e in events if e["kind"] == "nonfinite_loss"]
+        assert len(hits) == 1                      # one-shot
+        assert hits[0]["learners"], hits
+        bad = ~np.isfinite(dl.cumulative_loss_per_learner)
+        assert set(hits[0]["learners"]) <= set(np.flatnonzero(bad))
+        # more rounds: still silent
+        dl.run_chunk(_batches(4, 4, seed=9))
+        assert len([e for e in events
+                    if e["kind"] == "nonfinite_loss"]) == 1
+    finally:
+        log.remove_handler(handler)
+    # a clean run emits nothing
+    events.clear()
+    handler = log.add_handler(events.append)
+    try:
+        _fingerprint(BASE_SPECS["dynamic"], rounds=8)
+        assert not [e for e in events if e["kind"] == "nonfinite_loss"]
+    finally:
+        log.remove_handler(handler)
+
+
+def test_fault_card_reconstructs_from_stream(tmp_path):
+    path = str(tmp_path / "faulty.jsonl")
+    dl, _, _ = _fingerprint(BASE_SPECS["robust_dynamic"], faults=HEAVY,
+                            rounds=24, m=8,
+                            telemetry=TelemetryConfig(path=path))
+    dl.recorder.close()
+    from repro.telemetry.observatory import load_run, summarize
+    card = summarize(load_run(path))
+    assert "faults" in card
+    assert card["faults"]["faulty_rounds"] > 0
+    assert card["faults"]["max_faulty"] >= 1
+    assert card["faults"]["total_recovered"] >= 0
+    assert card["faults"]["faulty"] and card["faults"]["quarantine"]
+
+
+# ---------------------------------------------------------------------------
+# atomic checkpoints: crash mid-save leaves the previous one intact
+# ---------------------------------------------------------------------------
+
+def _checkpointable(m=4):
+    dl = DecentralizedLearner(_loss, _init, m,
+                              PROTOCOLS["robust_periodic"].with_params(b=2))
+    dl.run_chunk(_batches(m, 4))
+    return dl
+
+
+def test_checkpoint_roundtrip_with_health_state(tmp_path):
+    dl = _checkpointable()
+    base = str(tmp_path / "ckpt")
+    save_protocol_state(base, dl.params, dl.opt_state, dl.sync_state,
+                        protocol=dl.spec, counters={"rounds": 4})
+    params, _, state = load_protocol_state(base)
+    assert _digest(params) == _digest(dl.params)
+    assert sorted(state.extra) == ["health", "recovered"]
+    assert load_protocol_spec(base).trigger == "robust_cadence"
+    assert load_counters(base) == {"rounds": 4}
+
+
+def test_checkpoint_crash_mid_save_keeps_previous(tmp_path, monkeypatch):
+    dl = _checkpointable()
+    base = str(tmp_path / "ckpt")
+    save_protocol_state(base, dl.params, dl.opt_state, dl.sync_state,
+                        protocol=dl.spec, counters={"rounds": 4})
+    want = _digest(load_protocol_state(base)[0])
+
+    real_savez = np.savez
+
+    def dying_savez(f, **kw):
+        f.write(b"this is not an npz")            # partial garbage...
+        raise RuntimeError("simulated crash mid-write")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    dl.run_chunk(_batches(4, 2, seed=5))          # newer state to save
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        save_protocol_state(base, dl.params, dl.opt_state, dl.sync_state)
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    # the previous complete checkpoint is untouched and still loads;
+    # no temp litter remains
+    params, _, state = load_protocol_state(base)
+    assert _digest(params) == want
+    assert not [f for f in os.listdir(tmp_path) if ".tmp." in f]
+
+
+def test_checkpoint_crash_mid_sidecar_keeps_previous(tmp_path,
+                                                     monkeypatch):
+    dl = _checkpointable()
+    base = str(tmp_path / "ckpt")
+    save_protocol_state(base, dl.params, dl.opt_state, dl.sync_state,
+                        counters={"rounds": 4})
+
+    import repro.checkpoint.io as io
+
+    def dying_text(path, text):
+        raise RuntimeError("simulated crash before sidecar write")
+
+    monkeypatch.setattr(io, "_atomic_text", dying_text)
+    with pytest.raises(RuntimeError):
+        save_protocol_state(base, dl.params, dl.opt_state, dl.sync_state,
+                            counters={"rounds": 9})
+    monkeypatch.undo()
+    assert load_counters(base) == {"rounds": 4}
+
+
+# ---------------------------------------------------------------------------
+# the example is runnable (subprocess; excluded from tier-1 via -m slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_faulty_fleet_example_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "faulty_fleet.py"),
+         "--smoke"],
+        capture_output=True, text=True, env=env, timeout=600, cwd=REPO)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "faulty_fleet_done" in r.stdout

@@ -84,7 +84,7 @@ def test_unknown_stage_names_raise_at_construction():
     with pytest.raises(KeyError, match="unknown cohort"):
         ProtocolSpec(trigger="cadence", cohort="everyone-and-their-dog")
     with pytest.raises(KeyError, match="unknown aggregate"):
-        ProtocolSpec(trigger="cadence", aggregate="median")
+        ProtocolSpec(trigger="cadence", aggregate="vibes")
     with pytest.raises(KeyError, match="unknown commit"):
         ProtocolSpec(trigger="cadence", commit="yolo")
 
